@@ -1,0 +1,141 @@
+"""Shared benchmark fixtures: scenes, models, measured workload traces.
+
+Expensive artifacts are cached in runs/bench_cache so ``-m benchmarks.run``
+is re-runnable; frame sizes are CPU-budgeted (paper-scale numbers in the cost
+model scale from the *measured ratios*, which are resolution-robust).
+"""
+from __future__ import annotations
+
+import functools
+import json
+import time
+from pathlib import Path
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import costmodel, layout, streaming
+from repro.nerf import mlp, models, rays, scenes
+
+CACHE = Path(__file__).resolve().parents[1] / "runs" / "bench_cache"
+RES = 64
+SAMPLES = 48
+GRID = 64
+# cost-model traces use a paper-scale grid (96^3 x 8ch = 28 MB > the 2 MB
+# on-chip buffer, like the paper's 10-1000 MB models) and a real-time
+# trajectory step (0.25 deg/frame ~ 30+ FPS head motion, Fig. 7 premise)
+TRACE_GRID = 96
+TRACE_STEP_DEG = 0.25
+
+
+def timed(fn, *args, reps: int = 3, **kw) -> Tuple[float, object]:
+    out = fn(*args, **kw)
+    jax.block_until_ready(out)
+    t0 = time.time()
+    for _ in range(reps):
+        out = fn(*args, **kw)
+        jax.block_until_ready(out)
+    return (time.time() - t0) / reps, out
+
+
+@functools.lru_cache(maxsize=None)
+def bench_model(kind: str = "dvgo"):
+    scene = scenes.make_scene("lego")
+    if kind == "dvgo":
+        model, cfg = models.make_model("dvgo", grid_res=GRID, channels=4,
+                                       decoder="direct", num_samples=SAMPLES)
+        params = model.init_baked(scene)
+    else:
+        model, cfg = models.make_model(kind, grid_res=32, hash_levels=6,
+                                       hash_table_size=2**13,
+                                       decoder="mlp", mlp_hidden=32,
+                                       num_samples=SAMPLES)
+        params = model.init(jax.random.key(0))
+    return scene, model, params
+
+
+@functools.lru_cache(maxsize=None)
+def frame_points(kind: str = "dvgo") -> np.ndarray:
+    """Ray-sample positions of one bench frame (pixel-centric order)."""
+    _, model, _ = bench_model(kind)
+    cam = rays.Camera.square(RES)
+    o, d = rays.generate_rays(cam, rays.orbit_pose(jnp.asarray(0.2)))
+    pts, _ = rays.sample_along_rays(o, d, model.cfg.near, model.cfg.far,
+                                    SAMPLES)
+    return np.asarray(pts.reshape(-1, 3))
+
+
+def measured_trace(kind: str = "dvgo") -> costmodel.FrameTrace:
+    """FrameTrace with DRAM/cache/bank statistics measured on real renders
+    (cached — the LRU sim is the slow part)."""
+    CACHE.mkdir(parents=True, exist_ok=True)
+    f = CACHE / f"trace_{kind}.json"
+    if f.exists():
+        d = json.loads(f.read_text())
+        return costmodel.FrameTrace(**d)
+    pts = frame_points(kind)
+    scfg = streaming.StreamingCfg(grid_res=TRACE_GRID, mvoxel_edge=8,
+                                  capacity=512)
+    # 64 KiB effective cache: the paper's 2 MB buffer : 10-1000 MB tables at
+    # our (samples, table) scale — keeps the measured miss regime (Fig. 5)
+    pc = streaming.pixel_centric_traffic(pts, TRACE_GRID, channels=8,
+                                         cache_bytes=64 * 1024)
+    mv = np.asarray(streaming.mvoxel_ids(jnp.asarray(pts), scfg))
+    fs = streaming.streaming_traffic(mv, scfg, channels=8)
+    touched_frac = fs["mvoxels_touched"] / scfg.num_mvoxels
+    from repro.nerf import grids
+    ids, _ = grids.corner_ids_weights(jnp.asarray(pts), TRACE_GRID)
+    bank = layout.bank_conflict_stats(np.asarray(ids), layout.SramCfg())
+    n = pts.shape[0]
+    # scale traffic to the paper's 800x800x192 workload (ratios are measured)
+    scale = (800 * 800 * 192) / n
+    dcfg = mlp.DecoderCfg(mode="mlp", in_channels=8, hidden=64)
+    tr = costmodel.FrameTrace(
+        num_rays=800 * 800,
+        num_samples=800 * 800 * 192,
+        feat_channels=8,
+        mlp_flops_per_sample=float(mlp.decoder_flops(dcfg)),
+        pc_dram_bytes=float(pc["bytes"] * scale),
+        pc_streaming_fraction=float(pc["streaming_fraction"]),
+        # streaming traffic is a FIXED per-frame cost (each touched MVoxel
+        # halo block read once) — scale to the paper-size table, not by
+        # sample count
+        fs_dram_bytes=float(_paper_table_bytes(kind) * 1.42 * touched_frac),
+        sram_bytes=float(n * 8 * 8 * 4 * scale),
+        feature_major_slowdown=float(bank["slowdown"]),
+    )
+    f.write_text(json.dumps(tr.__dict__))
+    return tr
+
+
+def _paper_table_bytes(kind: str) -> float:
+    from repro.configs.cicero_nerf import NERF_CONFIGS
+    return float(NERF_CONFIGS[f"cicero-{kind}"].feature_table_bytes())
+
+
+def measured_sparw(window: int, step_deg: float = TRACE_STEP_DEG,
+                   scene_name: str = "lego") -> costmodel.SparwTrace:
+    """Hole fraction measured by actually warping bench renders."""
+    CACHE.mkdir(parents=True, exist_ok=True)
+    f = CACHE / f"sparw_w{window}_{scene_name}_{step_deg}.json"
+    if f.exists():
+        d = json.loads(f.read_text())
+        return costmodel.SparwTrace(**d)
+    from repro.core import pipeline
+
+    scene, model, params = bench_model("dvgo")
+    cam = rays.Camera.square(RES)
+    r = pipeline.CiceroRenderer(model, params, cam, window=window)
+    traj = pipeline.orbit_trajectory(max(window, 8), step_deg=step_deg)
+    _, stats = r.render_trajectory(traj)
+    tr = costmodel.SparwTrace(window=window,
+                              hole_fraction=stats.mean_hole_fraction,
+                              warp_pixels=cam.height * cam.width)
+    f.write_text(json.dumps(tr.__dict__))
+    return tr
+
+
+def csv_row(name: str, us_per_call: float, derived: str) -> str:
+    return f"{name},{us_per_call:.2f},{derived}"

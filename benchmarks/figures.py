@@ -1,0 +1,311 @@
+"""One function per paper table/figure. Each returns CSV rows
+``name,us_per_call,derived`` (us_per_call = wall time of the measured unit;
+derived = the figure's headline quantity)."""
+from __future__ import annotations
+
+import time
+from typing import List
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks import common
+from repro.core import costmodel, layout, pipeline, sparw, streaming
+from repro.nerf import grids, mlp, models, rays, scenes
+from repro.utils import psnr
+
+
+# ---------------------------------------------------------------------------
+def fig03_stage_breakdown() -> List[str]:
+    """Execution split across I/G/F (paper: gathering >56% on average)."""
+    rows = []
+    for kind in ("dvgo", "ngp", "tensorf"):
+        scene, model, params = common.bench_model(kind)
+        cam = rays.Camera.square(common.RES)
+        o, d = rays.generate_rays(cam, rays.orbit_pose(jnp.asarray(0.2)))
+
+        @jax.jit
+        def stage_index(o, d):
+            pts, t = rays.sample_along_rays(o, d, model.cfg.near,
+                                            model.cfg.far, common.SAMPLES)
+            return pts
+
+        pts = stage_index(o, d)
+        flat = pts.reshape(-1, 3)
+
+        gather = jax.jit(lambda p: model.query_features(params, p))
+        t_i, _ = common.timed(stage_index, o, d)
+        t_g, feats = common.timed(gather, flat)
+        dirs = jnp.repeat(d, common.SAMPLES, axis=0)
+        if model.cfg.decoder == "direct":
+            dec = jax.jit(lambda f: mlp.decode({}, f, dirs, model.cfg.decoder_cfg))
+        else:
+            dec = jax.jit(lambda f: mlp.decode(params["decoder"], f, dirs,
+                                               model.cfg.decoder_cfg))
+        t_f, _ = common.timed(dec, feats)
+        tot = t_i + t_g + t_f
+        rows.append(common.csv_row(
+            f"fig03_{kind}", tot * 1e6,
+            f"I={t_i/tot:.2f} G={t_g/tot:.2f} F={t_f/tot:.2f}"))
+    return rows
+
+
+# ---------------------------------------------------------------------------
+def fig04_05_dram() -> List[str]:
+    """Non-streaming DRAM fraction (Fig.4, paper >81%) + cache miss (Fig.5)."""
+    rows = []
+    for kind in ("dvgo", "ngp"):
+        pts = common.frame_points(kind)
+        t0 = time.time()
+        st = streaming.pixel_centric_traffic(pts, common.GRID, channels=4,
+                                             cache_bytes=256 * 1024)
+        rows.append(common.csv_row(
+            f"fig04_{kind}", (time.time() - t0) * 1e6,
+            f"non_streaming={st['non_streaming_fraction']:.2f} "
+            f"miss_rate={st['miss_rate']:.2f}"))
+    return rows
+
+
+# ---------------------------------------------------------------------------
+def fig06_bank_conflicts() -> List[str]:
+    """Feature-major conflict rates, 16 banks (paper avg 52%; 64-ray ↑)."""
+    rows = []
+    for kind in ("dvgo", "ngp"):
+        pts = common.frame_points(kind)
+        ids, _ = grids.corner_ids_weights(jnp.asarray(pts), common.GRID)
+        ids = np.asarray(ids)
+        t0 = time.time()
+        c16 = layout.bank_conflict_stats(ids, layout.SramCfg())
+        c64 = layout.bank_conflict_stats(
+            ids, layout.SramCfg(concurrent_rays=64))
+        cm = layout.channel_major_stats(ids, layout.SramCfg())
+        rows.append(common.csv_row(
+            f"fig06_{kind}", (time.time() - t0) * 1e6,
+            f"feature_major16={c16['conflict_rate']:.2f} "
+            f"feature_major64={c64['conflict_rate']:.2f} "
+            f"channel_major={cm['conflict_rate']:.2f}"))
+    return rows
+
+
+# ---------------------------------------------------------------------------
+def fig07_overlap() -> List[str]:
+    """Adjacent-frame overlap across scenes (paper: >98% ± 1.7)."""
+    rows = []
+    scene_names = scenes.SCENE_NAMES[:4]
+    overlaps = []
+    t0 = time.time()
+    for name in scene_names:
+        sc = scenes.make_scene(name)
+        model, _ = models.make_model("dvgo", grid_res=48, channels=4,
+                                     decoder="direct", num_samples=32)
+        params = model.init_baked(sc)
+        cam = rays.Camera.square(48)
+        p0 = rays.orbit_pose(jnp.asarray(0.3))
+        p1 = rays.orbit_pose(jnp.asarray(0.3 + jnp.deg2rad(1.0)))
+        rgb, dep = model.render_image(params, cam, p0)
+        w = sparw.warp_frame(rgb, dep, p0, p1, cam)
+        overlaps.append(1.0 - float(w.holes.mean()))
+    dt = (time.time() - t0) / len(scene_names)
+    rows.append(common.csv_row(
+        "fig07_overlap", dt * 1e6,
+        f"mean_overlap={np.mean(overlaps)*100:.1f}% "
+        f"min={np.min(overlaps)*100:.1f}% (paper >98%)"))
+    return rows
+
+
+# ---------------------------------------------------------------------------
+def fig16_quality(windows=(6, 16), n_frames: int = 16) -> List[str]:
+    """PSNR drop vs baseline: CICERO-6/16 vs DS-2 vs TEMP-16 (Fig. 16)."""
+    rows = []
+    scene, model, params = common.bench_model("dvgo")
+    cam = rays.Camera.square(common.RES)
+    traj = pipeline.orbit_trajectory(n_frames, step_deg=0.5)
+    r0 = pipeline.CiceroRenderer(model, params, cam, window=max(windows))
+    t0 = time.time()
+    base = r0.render_baseline(traj)
+    for w in windows:
+        r = pipeline.CiceroRenderer(model, params, cam, window=w)
+        frames, stats = r.render_trajectory(traj)
+        p = np.mean([float(psnr(f, b)) for f, b in zip(frames, base)])
+        rows.append(common.csv_row(
+            f"fig16_cicero{w}", (time.time() - t0) * 1e6 / n_frames,
+            f"psnr_vs_baseline={p:.2f}dB holes={stats.mean_hole_fraction:.3f} "
+            f"mlp_work={stats.mlp_work_fraction:.3f}"))
+    ds2 = r0.render_ds2(traj)
+    p_ds = np.mean([float(psnr(f, b)) for f, b in zip(ds2, base)])
+    rows.append(common.csv_row("fig16_ds2", 0.0,
+                               f"psnr_vs_baseline={p_ds:.2f}dB"))
+    tmp = pipeline.CiceroRenderer(model, params, cam, window=16,
+                                  mode="temporal")
+    f_tmp, _ = tmp.render_trajectory(traj)
+    p_tmp = np.mean([float(psnr(f, b)) for f, b in zip(f_tmp, base)])
+    rows.append(common.csv_row("fig16_temp16", 0.0,
+                               f"psnr_vs_baseline={p_tmp:.2f}dB"))
+    return rows
+
+
+# ---------------------------------------------------------------------------
+def fig17_18_gpu_software() -> List[str]:
+    """Pure-software GPU variants (paper: 8.0× speed, 7.9× energy; DS-2 4×)."""
+    tr = common.measured_trace("dvgo")
+    sp = common.measured_sparw(16)
+    hw = costmodel.HardwareCfg()
+    v = costmodel.gpu_software_variants(tr, sp, hw)
+    base = v["gpu_baseline"]
+    rows = [common.csv_row(
+        "fig17_cicero_sw", v["cicero_sw"].time_per_frame * 1e6,
+        f"speedup={v['cicero_sw'].speedup_over(base):.1f}x "
+        f"energy_saving={v['cicero_sw'].energy_saving_over(base):.1f}x "
+        f"(paper 8.0x/7.9x)"),
+        common.csv_row(
+        "fig17_ds2", v["ds2"].time_per_frame * 1e6,
+        f"speedup={v['ds2'].speedup_over(base):.1f}x (paper 4.0x)")]
+    return rows
+
+
+# ---------------------------------------------------------------------------
+def fig19_variants() -> List[str]:
+    """Local + remote rendering variant grid (paper Fig. 19: 8.1×, ×1.2 FS,
+    28.2× CICERO local; 3.1×/3.8×/8.0× remote)."""
+    tr = common.measured_trace("dvgo")
+    sp = common.measured_sparw(16)
+    hw = costmodel.HardwareCfg()
+    rows = []
+    local = costmodel.standard_variants(tr, sp, hw)
+    b = local["baseline"]
+    for name in ("sparw", "sparw_fs", "cicero"):
+        rows.append(common.csv_row(
+            f"fig19_local_{name}", local[name].time_per_frame * 1e6,
+            f"speedup={local[name].speedup_over(b):.1f}x "
+            f"energy_saving={local[name].energy_saving_over(b):.1f}x"))
+    remote = costmodel.standard_variants(tr, sp, hw, remote=True)
+    rb = costmodel.remote_baseline(tr, hw)
+    for name in ("sparw", "sparw_fs", "cicero"):
+        rows.append(common.csv_row(
+            f"fig19_remote_{name}", remote[name].time_per_frame * 1e6,
+            f"speedup={rb.time_per_frame / remote[name].time_per_frame:.1f}x"))
+    return rows
+
+
+# ---------------------------------------------------------------------------
+def fig20_21_gather() -> List[str]:
+    """Feature-gathering speedup GU vs GPU + DRAM energy split (Fig. 20/21)."""
+    tr = common.measured_trace("dvgo")
+    hw = costmodel.HardwareCfg()
+    gpu = costmodel.full_frame_cost(tr, hw, gather="gpu", mlp="npu",
+                                    streaming=False)
+    gu = costmodel.full_frame_cost(tr, hw, gather="gu_channel_major",
+                                   mlp="npu", streaming=True)
+    gu_fm = costmodel.full_frame_cost(tr, hw, gather="gu_feature_major",
+                                      mlp="npu", streaming=True)
+    su = gpu.t_gather / gu.t_gather
+    su_fm = gpu.t_gather / gu_fm.t_gather
+    # energy split: traffic reduction vs random->streaming conversion
+    e_rand = costmodel._dram_energy(tr.pc_dram_bytes,
+                                    tr.pc_streaming_fraction, hw)
+    e_stream_same = costmodel._dram_energy(tr.pc_dram_bytes, 1.0, hw)
+    e_fs = costmodel._dram_energy(tr.fs_dram_bytes, 1.0, hw)
+    conv = (e_rand - e_stream_same) / (e_rand - e_fs)
+    rows = [
+        common.csv_row("fig20_gather_speedup", gu.t_gather * 1e6,
+                       f"gu_vs_gpu={su:.1f}x feature_major={su_fm:.1f}x "
+                       f"(paper 72.2x)"),
+        common.csv_row("fig21_energy_split", 0.0,
+                       f"traffic_reduction={(1-conv)*100:.0f}% "
+                       f"streaming_conversion={conv*100:.0f}% "
+                       f"(paper 84.5%/15.5%)"),
+    ]
+    return rows
+
+
+# ---------------------------------------------------------------------------
+def fig22_window_sensitivity(windows=(2, 4, 8, 16, 26)) -> List[str]:
+    """Speedup + quality vs warping window (Fig. 22; 0.5 deg/frame to show
+    the hole-driven plateau within a CPU-sized sweep)."""
+    tr = common.measured_trace("dvgo")
+    hw = costmodel.HardwareCfg()
+    rows = []
+    for w in windows:
+        sp = common.measured_sparw(w, step_deg=0.5)
+        v = costmodel.standard_variants(tr, sp, hw)
+        rows.append(common.csv_row(
+            f"fig22_window{w}", v["cicero"].time_per_frame * 1e6,
+            f"speedup={v['cicero'].speedup_over(v['baseline']):.1f}x "
+            f"holes={sp.hole_fraction:.3f}"))
+    return rows
+
+
+# ---------------------------------------------------------------------------
+def fig25_26_threshold(phis=(1.0, 2.0, 4.0, 8.0, None)) -> List[str]:
+    """Warp-angle threshold φ on a *specular* low-FPS trajectory (Fig. 26):
+    small φ recovers quality at reduced warp ratio."""
+    sc = scenes.make_scene("materials", specular=0.6)
+    model = models.NerfModel(models.NerfConfig(kind="oracle", num_samples=32),
+                             scene=sc)
+    cam = rays.Camera.square(48)
+    traj = pipeline.orbit_trajectory(8, step_deg=4.0)  # low temporal res
+    rows = []
+    base = [model.render_image({}, cam, p)[0] for p in traj]
+    for phi in phis:
+        r = pipeline.CiceroRenderer(model, {}, cam, window=4, phi_deg=phi)
+        frames, stats = r.render_trajectory(traj)
+        p = np.mean([float(psnr(f, b)) for f, b in zip(frames, base)])
+        warp_ratio = 1.0 - stats.mean_hole_fraction
+        rows.append(common.csv_row(
+            f"fig26_phi{phi}", 0.0,
+            f"psnr={p:.2f}dB warp_ratio={warp_ratio:.2f}"))
+    return rows
+
+
+# ---------------------------------------------------------------------------
+def kernels_bench() -> List[str]:
+    """Pallas kernels (interpret) vs jnp oracle timing + allclose check."""
+    from repro.core import streaming as st
+    from repro.kernels import ops, ref
+
+    rows = []
+    cfg = st.StreamingCfg(grid_res=48, mvoxel_edge=8, capacity=256)
+    table = jax.random.normal(jax.random.key(0), (48**3, 8))
+    pts = jax.random.uniform(jax.random.key(1), (20000, 3), minval=-1,
+                             maxval=1)
+    t_k, out = common.timed(
+        lambda: ops.gather_features_streaming(table, pts, cfg), reps=2)
+    ids, w = grids.corner_ids_weights(pts, 48)
+    t_r, want = common.timed(
+        jax.jit(lambda: ref.gather_trilerp_ref(table, ids, w)), reps=2)
+    err = float(jnp.abs(out - want).max())
+    rows.append(common.csv_row("kernel_gather_trilerp", t_k * 1e6,
+                               f"ref_us={t_r*1e6:.0f} maxerr={err:.1e}"))
+
+    dcfg = mlp.DecoderCfg(mode="mlp", in_channels=8, hidden=64)
+    params = mlp.decoder_init(jax.random.key(2), dcfg)
+    feats = jax.random.normal(jax.random.key(3), (16384, 8))
+    dirs = jax.random.normal(jax.random.key(4), (16384, 3))
+    enc = mlp._dir_enc(dirs / jnp.linalg.norm(dirs, axis=-1, keepdims=True))
+    t_k, _ = common.timed(lambda: ops.nerf_mlp(feats, enc, params), reps=2)
+    rows.append(common.csv_row("kernel_fused_nerf_mlp", t_k * 1e6, "ok"))
+
+    q = jax.random.normal(jax.random.key(5), (1, 4, 512, 64))
+    k = jax.random.normal(jax.random.key(6), (1, 2, 512, 64))
+    v = jax.random.normal(jax.random.key(7), (1, 2, 512, 64))
+    t_k, outs = common.timed(lambda: ops.mha(q, k, v), reps=2)
+    err = float(jnp.abs(outs - ref.attention_ref(q, k, v)).max())
+    rows.append(common.csv_row("kernel_flash_attention", t_k * 1e6,
+                               f"maxerr={err:.1e}"))
+    return rows
+
+
+ALL = [
+    fig03_stage_breakdown,
+    fig04_05_dram,
+    fig06_bank_conflicts,
+    fig07_overlap,
+    fig16_quality,
+    fig17_18_gpu_software,
+    fig19_variants,
+    fig20_21_gather,
+    fig22_window_sensitivity,
+    fig25_26_threshold,
+    kernels_bench,
+]

@@ -1,0 +1,18 @@
+"""Inject the generated roofline tables into EXPERIMENTS.md placeholders."""
+from pathlib import Path
+
+from benchmarks.roofline_table import table
+
+ROOT = Path(__file__).resolve().parents[1]
+
+
+def main() -> None:
+    md = (ROOT / "EXPERIMENTS.md").read_text()
+    md = md.replace("<!-- ROOFLINE_TABLE_SINGLE -->", table("single"))
+    md = md.replace("<!-- ROOFLINE_TABLE_MULTI -->", table("multi"))
+    (ROOT / "EXPERIMENTS.md").write_text(md)
+    print("tables injected")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,56 @@
+"""Render the §Roofline table from runs/dryrun/*.json (dry-run artifacts)."""
+from __future__ import annotations
+
+import json
+from pathlib import Path
+from typing import List
+
+RUNS = Path(__file__).resolve().parents[1] / "runs" / "dryrun"
+
+
+def load_cells(mesh: str = "single") -> List[dict]:
+    out = []
+    for f in sorted((RUNS / mesh).glob("*.json")):
+        try:
+            out.append(json.loads(f.read_text()))
+        except Exception:
+            pass
+    return out
+
+
+def fmt_row(d: dict) -> str:
+    mfu = d.get("mfu", 0.0) * 100
+    return (f"| {d['arch']} | {d['shape']} | {d['compute_s']*1e3:9.2f} | "
+            f"{d['memory_s']*1e3:9.2f} | {d['collective_s']*1e3:9.2f} | "
+            f"{d['dominant']:10s} | {d['step_time_s']*1e3:9.2f} | "
+            f"{mfu:5.1f} | {d.get('useful_flops_fraction', 0):5.2f} | "
+            f"{(d['arg_bytes']+d['temp_bytes'])/2**30:6.1f} |")
+
+
+HEADER = ("| arch | shape | compute ms | memory ms | coll ms | dominant | "
+          "step ms | MFU% | useful | GiB/dev |")
+SEP = "|---" * 10 + "|"
+
+
+def table(mesh: str = "single") -> str:
+    cells = load_cells(mesh)
+    lines = [HEADER, SEP] + [fmt_row(d) for d in cells]
+    return "\n".join(lines)
+
+
+def run() -> List[str]:
+    rows = []
+    for mesh in ("single", "multi"):
+        for d in load_cells(mesh):
+            rows.append(
+                f"roofline_{mesh}_{d['arch']}_{d['shape']},"
+                f"{d['step_time_s']*1e6:.1f},"
+                f"dominant={d['dominant']} mfu={d.get('mfu', 0)*100:.1f}% "
+                f"mem_gib={(d['arg_bytes']+d['temp_bytes'])/2**30:.1f}")
+    return rows
+
+
+if __name__ == "__main__":
+    print(table("single"))
+    print()
+    print(table("multi"))

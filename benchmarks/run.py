@@ -1,0 +1,42 @@
+"""Benchmark harness: one function per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV (plus the roofline rows when dry-run
+artifacts exist). ``--only fig16`` runs a single figure.
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+import traceback
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None,
+                    help="substring filter on figure function names")
+    args = ap.parse_args()
+
+    from benchmarks import figures, roofline_table
+
+    fns = list(figures.ALL) + [roofline_table.run]
+    print("name,us_per_call,derived")
+    failures = 0
+    for fn in fns:
+        if args.only and args.only not in fn.__name__:
+            continue
+        t0 = time.time()
+        try:
+            for row in fn():
+                print(row, flush=True)
+        except Exception as e:
+            failures += 1
+            print(f"{fn.__name__},0,ERROR:{type(e).__name__}:{e}", flush=True)
+            traceback.print_exc(file=sys.stderr)
+        print(f"# {fn.__name__} took {time.time()-t0:.1f}s", flush=True)
+    if failures:
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

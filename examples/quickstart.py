@@ -1,0 +1,57 @@
+"""Quickstart: the paper's pipeline in ~60 lines.
+
+1. Build a procedural scene + baked DVGO-style NeRF.
+2. Render a short trajectory with SPARW (reference warp + sparse NeRF).
+3. Compare PSNR + saved MLP work vs full-frame rendering.
+4. Run the streaming (memory-centric) gather and the Pallas GU kernel.
+
+  PYTHONPATH=src python examples/quickstart.py
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import pipeline, streaming
+from repro.kernels import ops
+from repro.nerf import grids, models, rays, scenes
+from repro.utils import psnr
+
+
+def main():
+    print("== scene + baked model ==")
+    scene = scenes.make_scene("lego")
+    model, _ = models.make_model("dvgo", grid_res=48, channels=4,
+                                 decoder="direct", num_samples=32)
+    params = model.init_baked(scene)
+    cam = rays.Camera.square(64)
+
+    print("== SPARW trajectory render (window=6) ==")
+    traj = pipeline.orbit_trajectory(6, step_deg=1.0)
+    r = pipeline.CiceroRenderer(model, params, cam, window=6)
+    frames, stats = r.render_trajectory(traj)
+    base = r.render_baseline(traj)
+    vals = [float(psnr(f, b)) for f, b in zip(frames, base)]
+    print(f"  PSNR vs full-frame baseline : {np.mean(vals):.2f} dB")
+    print(f"  disoccluded (sparse) pixels : {stats.mean_hole_fraction*100:.1f}%")
+    print(f"  MLP work vs baseline        : {stats.mlp_work_fraction*100:.1f}%"
+          f"  (paper: ~12% at window 16)")
+
+    print("== memory-centric streaming gather ==")
+    pts = jax.random.uniform(jax.random.key(0), (5000, 3), minval=-1,
+                             maxval=1)
+    cfg = streaming.StreamingCfg(grid_res=48, mvoxel_edge=8, capacity=256)
+    feats, order = streaming.streaming_gather(params["table"], pts, cfg)
+    ids, w = grids.corner_ids_weights(pts, 48)
+    ref = grids.gather_trilerp_ref(params["table"], ids, w)
+    print(f"  streaming == pixel-centric  : "
+          f"max|Δ| = {float(jnp.abs(feats-ref).max()):.1e}")
+
+    print("== Pallas GU kernel (channel-major, interpret mode) ==")
+    got = ops.gather_features_streaming(params["table"], pts, cfg)
+    print(f"  kernel == oracle            : "
+          f"max|Δ| = {float(jnp.abs(got-ref).max()):.1e}")
+    print("done.")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,54 @@
+"""Batched LM serving with the continuous-batching engine.
+
+  PYTHONPATH=src python examples/serve_lm.py [--requests 6] [--slots 3]
+
+Reports throughput and the cache-reuse ratio (the SPARW analogue: context
+served from KV cache instead of recomputed — DESIGN.md §5).
+"""
+import argparse
+import time
+
+import jax
+import numpy as np
+
+from repro.configs import registry
+from repro.models import lm
+from repro.serve.engine import Request, ServeEngine
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="qwen2.5-32b")
+    ap.add_argument("--requests", type=int, default=6)
+    ap.add_argument("--slots", type=int, default=3)
+    ap.add_argument("--prompt-len", type=int, default=16)
+    ap.add_argument("--max-new", type=int, default=12)
+    args = ap.parse_args()
+
+    cfg = registry.get_reduced(args.arch)
+    print(f"serving {cfg.name} ({cfg.family}) with {args.slots} slots")
+    params = lm.init_params(cfg, jax.random.key(0))
+    rng = np.random.default_rng(0)
+    reqs = [Request(rid=i,
+                    prompt=rng.integers(0, cfg.vocab_size,
+                                        size=args.prompt_len).astype(np.int32),
+                    max_new=args.max_new)
+            for i in range(args.requests)]
+
+    eng = ServeEngine(cfg, params, num_slots=args.slots,
+                      max_len=args.prompt_len + args.max_new + 4)
+    t0 = time.time()
+    stats = eng.run(reqs)
+    dt = time.time() - t0
+    toks = sum(len(r.out) for r in reqs)
+    print(f"generated {toks} tokens in {dt:.2f}s "
+          f"({toks/dt:.1f} tok/s on 1 CPU core)")
+    print(f"engine ticks: {stats['ticks']}  "
+          f"cache reuse ratio: {stats['reuse_ratio']*100:.1f}% "
+          f"(SPARW warp-ratio analogue)")
+    for r in reqs[:3]:
+        print(f"  req {r.rid}: {list(r.prompt[:6])}... -> {r.out[:8]}...")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,65 @@
+"""End-to-end driver: train a ~100M-parameter LM for a few hundred steps on
+the synthetic pipeline with checkpoint/restart + fault tolerance.
+
+  PYTHONPATH=src python examples/train_lm.py [--steps 300] [--arch xlstm-350m]
+  PYTHONPATH=src python examples/train_lm.py --resume      # restart demo
+
+The config is a width-reduced cousin of an assigned arch (~100M params) so a
+few hundred CPU steps show a real loss curve; the identical Trainer drives
+the full configs on the production mesh.
+"""
+import argparse
+
+import numpy as np
+
+from repro.configs import registry
+from repro.data.pipeline import DataConfig
+from repro.train.trainer import Trainer, TrainerConfig
+from repro.utils import human_count
+
+
+def make_100m_config(arch: str):
+    base = registry.get(arch)
+    if base.family == "ssm":
+        cfg = base.with_(name=base.name + "-100m", num_layers=16,
+                         d_model=1024, vocab_size=16384, dtype="float32")
+    else:
+        cfg = registry.get_reduced(arch).with_(
+            name=base.name + "-100m", num_layers=8, d_model=768,
+            num_heads=12, num_kv_heads=4, d_ff=3072, vocab_size=16384,
+            dtype="float32")
+    return cfg
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="minitron-4b")
+    ap.add_argument("--steps", type=int, default=300)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--resume", action="store_true")
+    ap.add_argument("--ckpt-dir", default="runs/example_ckpt")
+    args = ap.parse_args()
+
+    cfg = make_100m_config(args.arch)
+    print(f"training {cfg.name}: {human_count(cfg.param_count())} params")
+    dcfg = DataConfig(vocab_size=cfg.vocab_size, seq_len=args.seq,
+                      global_batch=args.batch,
+                      enc_seq_len=cfg.enc_seq_len,
+                      num_image_tokens=cfg.num_image_tokens,
+                      d_model=cfg.d_model)
+    tcfg = TrainerConfig(ckpt_dir=args.ckpt_dir, ckpt_every=50,
+                         log_every=10, base_lr=1e-3, warmup=20,
+                         total_steps=args.steps,
+                         metrics_path="runs/example_metrics.jsonl")
+    trainer = Trainer(cfg, dcfg, tcfg)
+    out = trainer.run(args.steps, resume=args.resume)
+    losses = out["losses"]
+    print(f"steps {out['final_step']}: "
+          f"loss {np.mean(losses[:10]):.3f} -> {np.mean(losses[-10:]):.3f} "
+          f"(restarts={out['restarts']}, "
+          f"stragglers={out['straggler_events']})")
+
+
+if __name__ == "__main__":
+    main()

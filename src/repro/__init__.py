@@ -1,0 +1,4 @@
+"""repro: Cicero (radiance warping + memory-centric streaming) as a
+multi-pod JAX framework. See DESIGN.md."""
+
+__version__ = "1.0.0"

@@ -1,0 +1,6 @@
+from repro.configs import base, registry
+from repro.configs.base import (MULTI_POD, NERF_SHAPES, SHAPES, SINGLE_POD,
+                                LayerSpec, MeshConfig, ModelConfig, ShapeConfig)
+
+__all__ = ["base", "registry", "ModelConfig", "LayerSpec", "ShapeConfig",
+           "MeshConfig", "SHAPES", "NERF_SHAPES", "SINGLE_POD", "MULTI_POD"]

@@ -1,0 +1,229 @@
+"""Config system: composable layer-pattern model configs + shape suites.
+
+A model is a stack of ``LayerSpec`` periods scanned ``num_layers / period`` times
+(``jax.lax.scan`` over stacked parameters) — this is what lets 48–72 layer models
+lower to an HLO the size of one period, and doubles as the production remat policy.
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass, field, replace
+from typing import Optional, Tuple
+
+
+@dataclass(frozen=True)
+class LayerSpec:
+    """One layer inside the repeating pattern."""
+
+    mixer: str = "attn"  # attn | mamba | mlstm | slstm
+    attn_kind: str = "full"  # full | local   (local = chunked windowed attention)
+    ffn: str = "dense"  # dense | moe | none
+
+
+@dataclass(frozen=True)
+class ModelConfig:
+    name: str
+    family: str  # dense | moe | hybrid | ssm | audio | vlm | nerf
+    num_layers: int
+    d_model: int
+    num_heads: int
+    num_kv_heads: int
+    d_ff: int
+    vocab_size: int
+    layer_pattern: Tuple[LayerSpec, ...] = (LayerSpec(),)
+    head_dim: Optional[int] = None
+
+    # --- MoE ---
+    moe_num_experts: int = 0
+    moe_top_k: int = 0
+    moe_d_ff: int = 0
+    moe_shared_expert: bool = False
+    moe_dispatch: str = "einsum"  # einsum | streaming  (streaming = Cicero RIT-style)
+    capacity_factor: float = 1.25
+
+    # --- attention ---
+    qkv_bias: bool = False
+    rope_theta: float = 10000.0
+    local_window: int = 8192  # for attn_kind == "local"
+    logit_softcap: float = 0.0
+
+    # --- mamba ---
+    mamba_d_state: int = 128
+    mamba_d_conv: int = 4
+    mamba_expand: int = 2
+    mamba_n_groups: int = 1
+
+    # --- xlstm ---
+    xlstm_heads: int = 4
+
+    # --- encoder-decoder (audio) ---
+    encoder_layers: int = 0
+    enc_seq_len: int = 0  # stub frontend: number of precomputed frame embeddings
+
+    # --- vlm ---
+    num_image_tokens: int = 0  # stub frontend: precomputed patch embeddings
+
+    # --- perf knobs (hillclimbed in EXPERIMENTS.md §Perf) ---
+    q_block: int = 1024  # blocked-attention query tile
+    loss_chunk: int = 512  # CE seq-chunk (scan trip size)
+    sharding_strategy: str = "tp"  # tp | fsdp  (parallel/sharding.py)
+    collective_dtype: str = "native"  # native | bfloat16 (grad all-reduce)
+
+    # --- numerics / misc ---
+    dtype: str = "bfloat16"
+    norm_eps: float = 1e-5
+    tie_embeddings: bool = False
+    remat: bool = True
+    scan_layers: bool = True
+    # which shapes are skipped for this arch, with reasons (recorded in DESIGN.md)
+    skip_shapes: Tuple[str, ...] = ()
+
+    def __post_init__(self):
+        if self.head_dim is None:
+            object.__setattr__(self, "head_dim", self.d_model // self.num_heads)
+        assert self.num_layers % len(self.layer_pattern) == 0, (
+            f"{self.name}: num_layers={self.num_layers} not divisible by "
+            f"pattern period {len(self.layer_pattern)}"
+        )
+
+    @property
+    def period(self) -> int:
+        return len(self.layer_pattern)
+
+    @property
+    def num_periods(self) -> int:
+        return self.num_layers // self.period
+
+    def with_(self, **kw) -> "ModelConfig":
+        return replace(self, **kw)
+
+    # ------------------------------------------------------------------
+    # parameter accounting (used by roofline MODEL_FLOPS and sanity tests)
+    # ------------------------------------------------------------------
+    def _attn_params(self) -> int:
+        hd = self.head_dim
+        q = self.d_model * self.num_heads * hd
+        kv = 2 * self.d_model * self.num_kv_heads * hd
+        o = self.num_heads * hd * self.d_model
+        bias = (self.num_heads + 2 * self.num_kv_heads) * hd if self.qkv_bias else 0
+        return q + kv + o + bias
+
+    def _dense_ffn_params(self, d_ff: int) -> int:
+        return 3 * self.d_model * d_ff  # SwiGLU: gate, up, down
+
+    def _mamba_params(self) -> int:
+        d_inner = self.mamba_expand * self.d_model
+        in_proj = self.d_model * 2 * d_inner
+        conv = self.mamba_d_conv * d_inner
+        x_proj = d_inner * (2 * self.mamba_d_state + self.num_heads)
+        dt = self.num_heads
+        out = d_inner * self.d_model
+        return in_proj + conv + x_proj + dt + out
+
+    def _xlstm_params(self, kind: str) -> int:
+        d = self.d_model
+        if kind == "mlstm":
+            d_inner = 2 * d
+            return d * (2 * d_inner) + 3 * d_inner * d_inner // self.xlstm_heads * self.xlstm_heads + d_inner * d
+        # sLSTM: 4 gates, recurrent + input
+        return 8 * d * d + 2 * d * (4 * d // 3)
+
+    def layer_params(self, spec: LayerSpec) -> int:
+        p = 0
+        if spec.mixer == "attn":
+            p += self._attn_params()
+        elif spec.mixer == "mamba":
+            p += self._mamba_params()
+        elif spec.mixer in ("mlstm", "slstm"):
+            p += self._xlstm_params(spec.mixer)
+        if spec.ffn == "dense":
+            p += self._dense_ffn_params(self.d_ff)
+        elif spec.ffn == "moe":
+            expert = self._dense_ffn_params(self.moe_d_ff or self.d_ff)
+            p += self.moe_num_experts * expert
+            p += self.d_model * self.moe_num_experts  # router
+            if self.moe_shared_expert:
+                p += expert
+        p += 2 * self.d_model  # norms
+        return p
+
+    def param_count(self) -> int:
+        """Total parameters (embeddings + blocks + head)."""
+        total = self.vocab_size * self.d_model  # embed
+        if not self.tie_embeddings:
+            total += self.vocab_size * self.d_model  # lm head
+        n_rep = self.num_layers // self.period
+        total += n_rep * sum(self.layer_params(s) for s in self.layer_pattern)
+        if self.encoder_layers:
+            enc_spec = LayerSpec(mixer="attn", ffn="dense")
+            # encoder blocks + decoder cross-attention additions
+            total += self.encoder_layers * self.layer_params(enc_spec)
+            total += self.num_layers * self._attn_params()  # cross-attn per dec layer
+        total += self.d_model  # final norm
+        return total
+
+    def active_param_count(self) -> int:
+        """Parameters touched per token (MoE: top_k + shared experts only)."""
+        total = self.vocab_size * self.d_model
+        if not self.tie_embeddings:
+            total += self.vocab_size * self.d_model
+        n_rep = self.num_layers // self.period
+        act = 0
+        for s in self.layer_pattern:
+            p = self.layer_params(s)
+            if s.ffn == "moe":
+                expert = self._dense_ffn_params(self.moe_d_ff or self.d_ff)
+                p -= self.moe_num_experts * expert
+                p += self.moe_top_k * expert
+            act += p
+        total += n_rep * act + self.d_model
+        return total
+
+
+@dataclass(frozen=True)
+class ShapeConfig:
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str  # train | prefill | decode
+
+    @property
+    def tokens_per_step(self) -> int:
+        if self.kind == "decode":
+            return self.global_batch  # one new token per sequence
+        return self.seq_len * self.global_batch
+
+
+# The four assigned LM shape suites (see system brief).
+SHAPES: dict[str, ShapeConfig] = {
+    "train_4k": ShapeConfig("train_4k", seq_len=4096, global_batch=256, kind="train"),
+    "prefill_32k": ShapeConfig("prefill_32k", seq_len=32768, global_batch=32, kind="prefill"),
+    "decode_32k": ShapeConfig("decode_32k", seq_len=32768, global_batch=128, kind="decode"),
+    "long_500k": ShapeConfig("long_500k", seq_len=524288, global_batch=1, kind="decode"),
+}
+
+# Rendering shape for the paper's own NeRF configs: rays per frame tile.
+NERF_SHAPES: dict[str, ShapeConfig] = {
+    "render_800": ShapeConfig("render_800", seq_len=800 * 800, global_batch=1, kind="prefill"),
+}
+
+
+@dataclass(frozen=True)
+class MeshConfig:
+    shape: Tuple[int, ...]
+    axes: Tuple[str, ...]
+
+    @property
+    def num_devices(self) -> int:
+        n = 1
+        for s in self.shape:
+            n *= s
+        return n
+
+
+SINGLE_POD = MeshConfig(shape=(16, 16), axes=("data", "model"))
+MULTI_POD = MeshConfig(shape=(2, 16, 16), axes=("pod", "data", "model"))
+
+
+def asdict(cfg) -> dict:
+    return dataclasses.asdict(cfg)

@@ -1,0 +1,67 @@
+"""Architecture registry: ``--arch <id>`` resolution for every entry point."""
+from __future__ import annotations
+
+from typing import Dict, List
+
+from repro.configs import (
+    command_r_35b,
+    deepseek_coder_33b,
+    internvl2_1b,
+    jamba_1_5_large_398b,
+    llama4_maverick_400b_a17b,
+    minitron_4b,
+    moonshot_v1_16b_a3b,
+    qwen2_5_32b,
+    whisper_small,
+    xlstm_350m,
+)
+from repro.configs.base import ModelConfig, SHAPES, ShapeConfig
+
+_MODULES = [
+    llama4_maverick_400b_a17b,
+    moonshot_v1_16b_a3b,
+    jamba_1_5_large_398b,
+    qwen2_5_32b,
+    command_r_35b,
+    minitron_4b,
+    deepseek_coder_33b,
+    xlstm_350m,
+    whisper_small,
+    internvl2_1b,
+]
+
+ARCHS: Dict[str, ModelConfig] = {m.CONFIG.name: m.CONFIG for m in _MODULES}
+REDUCED: Dict[str, ModelConfig] = {m.CONFIG.name: m.REDUCED for m in _MODULES}
+
+
+def get(name: str) -> ModelConfig:
+    if name not in ARCHS:
+        raise KeyError(f"unknown arch {name!r}; have {sorted(ARCHS)}")
+    return ARCHS[name]
+
+
+def get_reduced(name: str) -> ModelConfig:
+    return REDUCED[get(name).name]
+
+
+def list_archs() -> List[str]:
+    return list(ARCHS)
+
+
+def runnable_cells() -> List[tuple[str, str]]:
+    """All (arch, shape) dry-run cells, honouring per-arch skips."""
+    cells = []
+    for arch, cfg in ARCHS.items():
+        for shape in SHAPES:
+            if shape in cfg.skip_shapes:
+                continue
+            cells.append((arch, shape))
+    return cells
+
+
+def skipped_cells() -> List[tuple[str, str, str]]:
+    out = []
+    for arch, cfg in ARCHS.items():
+        for shape in cfg.skip_shapes:
+            out.append((arch, shape, "sub-quadratic attention required"))
+    return out

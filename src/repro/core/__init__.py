@@ -1,0 +1,3 @@
+from repro.core import costmodel, layout, pipeline, schedule, sparw, streaming
+
+__all__ = ["costmodel", "layout", "pipeline", "schedule", "sparw", "streaming"]

@@ -1,0 +1,100 @@
+"""Reference-frame scheduling (paper §III-C, Fig. 10/11).
+
+Reference frames are *off-trajectory*: their pose is extrapolated from the
+last two target poses (Eq. 5–6) so full-frame rendering of R_{k+1} overlaps
+with warping of T_{kN}..T_{kN+N-1} from R_k. Rotation is extrapolated on
+SO(3) via log/exp (Rodrigues); translation linearly.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import List, Optional
+
+import jax.numpy as jnp
+import numpy as np
+
+
+def so3_log(r: jnp.ndarray) -> jnp.ndarray:
+    """Rotation matrix -> axis-angle vector."""
+    cos = jnp.clip((jnp.trace(r) - 1.0) / 2.0, -1.0, 1.0)
+    theta = jnp.arccos(cos)
+    w = jnp.array([r[2, 1] - r[1, 2], r[0, 2] - r[2, 0], r[1, 0] - r[0, 1]])
+    scale = jnp.where(theta < 1e-6, 0.5, theta / (2.0 * jnp.sin(theta) + 1e-12))
+    return w * scale
+
+
+def so3_exp(w: jnp.ndarray) -> jnp.ndarray:
+    theta = jnp.linalg.norm(w)
+    k = w / (theta + 1e-12)
+    kx = jnp.array([
+        [0.0, -k[2], k[1]],
+        [k[2], 0.0, -k[0]],
+        [-k[1], k[0], 0.0],
+    ])
+    r = jnp.eye(3) + jnp.sin(theta) * kx + (1.0 - jnp.cos(theta)) * (kx @ kx)
+    return jnp.where(theta < 1e-8, jnp.eye(3), r)
+
+
+def extrapolate_pose(pose_prev: jnp.ndarray, pose_curr: jnp.ndarray,
+                     steps_ahead: float) -> jnp.ndarray:
+    """Eq. 5–6: velocity from the last two poses, advanced ``steps_ahead``
+    frame intervals (the paper uses N/2 so the reference sits mid-window)."""
+    t_prev, t_curr = pose_prev[:3, 3], pose_curr[:3, 3]
+    v = t_curr - t_prev  # per frame interval
+    t_ref = t_curr + v * steps_ahead
+
+    dr = pose_curr[:3, :3] @ pose_prev[:3, :3].T
+    w = so3_log(dr)
+    r_ref = so3_exp(w * steps_ahead) @ pose_curr[:3, :3]
+
+    out = jnp.eye(4)
+    out = out.at[:3, :3].set(r_ref).at[:3, 3].set(t_ref)
+    return out
+
+
+@dataclass
+class WarpSchedule:
+    """Assigns each target frame to a reference frame.
+
+    window:      N — number of targets sharing one reference (Fig. 22 sweeps).
+    mode:
+      'offtraj'  — paper's scheme: reference poses extrapolated mid-window;
+                   reference rendering overlaps target rendering (Fig. 11b).
+      'temporal' — TEMP-N baseline: reference = previously *rendered* target
+                   frame (serialized, accumulates error; Fig. 16's TEMP-16).
+    """
+
+    window: int = 16
+    mode: str = "offtraj"
+
+    def plan(self, poses: List[jnp.ndarray]) -> List[dict]:
+        """Returns per-frame records: {frame, ref_pose, ref_is_frame_idx}.
+
+        For 'offtraj', ref_pose is a new extrapolated pose; the first window
+        bootstraps with the first trajectory pose as reference.
+        For 'temporal', each window's reference is the last frame of the
+        previous window (frame index recorded so its *rendered* image chains).
+        """
+        n = len(poses)
+        out = []
+        for k in range(0, n, self.window):
+            if self.mode == "offtraj":
+                if k == 0:
+                    ref_pose = poses[0]
+                else:
+                    # velocity at the last *known* pose before the window
+                    ref_pose = extrapolate_pose(
+                        poses[k - 2] if k >= 2 else poses[0],
+                        poses[k - 1],
+                        steps_ahead=self.window / 2.0,
+                    )
+                ref_idx: Optional[int] = None
+            elif self.mode == "temporal":
+                ref_idx = max(k - 1, 0)
+                ref_pose = poses[ref_idx]
+            else:
+                raise ValueError(self.mode)
+            for f in range(k, min(k + self.window, n)):
+                out.append({"frame": f, "window_start": k, "ref_pose": ref_pose,
+                            "ref_frame_idx": ref_idx})
+        return out

@@ -1,0 +1,122 @@
+"""SPARW — Sparse Radiance Warping (paper §III).
+
+Steps (Fig. 10): ① frame → point cloud (Eq. 1), ② rigid transform to the
+target camera (Eq. 2), ③ perspective re-projection with z-buffering (Eq. 3),
+④ sparse NeRF rendering of disoccluded pixels (Eq. 4).
+
+All steps are pure JAX and jit-able; the z-buffer uses a deterministic
+two-pass scatter-min (depth, then winner-index) so results are reproducible.
+Void pixels: the volume renderer assigns background rays depth = far, so the
+background warps like a skybox and passes the paper's depth test (§III-B ④)
+instead of being re-rendered.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.nerf.rays import Camera
+
+
+class WarpResult(NamedTuple):
+    rgb: jnp.ndarray  # [H, W, 3] warped colors (holes = 0)
+    depth: jnp.ndarray  # [H, W]  warped z-buffer depth (holes = +inf)
+    holes: jnp.ndarray  # [H, W]  bool — needs sparse NeRF rendering
+    warp_angle: jnp.ndarray  # [H, W] radians (only where warped)
+
+
+def frame_to_pointcloud(depth: jnp.ndarray, cam: Camera) -> jnp.ndarray:
+    """Eq. 1: per-pixel 3D points in the *reference camera* frame. [H*W, 3]."""
+    h, w = depth.shape
+    v, u = jnp.meshgrid(jnp.arange(h, dtype=jnp.float32),
+                        jnp.arange(w, dtype=jnp.float32), indexing="ij")
+    d = depth.reshape(-1)
+    x = (u.reshape(-1) + 0.5 - cam.cx) * d / cam.focal
+    y = (v.reshape(-1) + 0.5 - cam.cy) * d / cam.focal
+    return jnp.stack([x, y, d], axis=-1)
+
+
+def transform_points(points: jnp.ndarray, c2w_ref: jnp.ndarray,
+                     c2w_tgt: jnp.ndarray) -> jnp.ndarray:
+    """Eq. 2: T_{ref->tgt} = w2c_tgt @ c2w_ref applied to ref-frame points."""
+    r_ref, t_ref = c2w_ref[:3, :3], c2w_ref[:3, 3]
+    r_tgt, t_tgt = c2w_tgt[:3, :3], c2w_tgt[:3, 3]
+    world = points @ r_ref.T + t_ref
+    return (world - t_tgt) @ r_tgt  # R^T x == x @ R
+
+
+def project(points_tgt: jnp.ndarray, cam: Camera
+            ) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """Eq. 3: perspective projection -> (u, v, z) in the target image."""
+    z = points_tgt[:, 2]
+    safe_z = jnp.where(jnp.abs(z) < 1e-6, 1e-6, z)
+    u = cam.focal * points_tgt[:, 0] / safe_z + cam.cx - 0.5
+    v = cam.focal * points_tgt[:, 1] / safe_z + cam.cy - 0.5
+    return u, v, z
+
+
+def warp_frame(
+    rgb_ref: jnp.ndarray,  # [H, W, 3]
+    depth_ref: jnp.ndarray,  # [H, W]
+    c2w_ref: jnp.ndarray,
+    c2w_tgt: jnp.ndarray,
+    cam: Camera,
+    phi_deg: Optional[float] = None,
+    depth_eps: float = 1e-3,
+) -> WarpResult:
+    """Warp a reference frame into the target camera (steps ①–③)."""
+    h, w = depth_ref.shape
+    n = h * w
+    pts_ref = frame_to_pointcloud(depth_ref, cam)
+    world = pts_ref @ c2w_ref[:3, :3].T + c2w_ref[:3, 3]
+    pts_tgt = transform_points(pts_ref, c2w_ref, c2w_tgt)
+    u, v, z = project(pts_tgt, cam)
+
+    ui = jnp.round(u).astype(jnp.int32)
+    vi = jnp.round(v).astype(jnp.int32)
+    valid = (z > 1e-4) & (ui >= 0) & (ui < w) & (vi >= 0) & (vi < h)
+
+    # Warp-angle heuristic (§III-C / Fig. 26): angle subtended at the scene
+    # point between the reference ray and the target ray.
+    ray_ref = world - c2w_ref[:3, 3]
+    ray_tgt = world - c2w_tgt[:3, 3]
+    cos = jnp.sum(ray_ref * ray_tgt, -1) / (
+        jnp.linalg.norm(ray_ref, axis=-1) * jnp.linalg.norm(ray_tgt, axis=-1) + 1e-9)
+    angle = jnp.arccos(jnp.clip(cos, -1.0, 1.0))
+    if phi_deg is not None:
+        valid = valid & (angle <= jnp.deg2rad(phi_deg))
+
+    flat = jnp.where(valid, vi * w + ui, n)  # invalid -> dump slot n
+
+    # pass 1: scatter-min depth
+    zbuf = jnp.full((n + 1,), jnp.inf).at[flat].min(z)
+    # pass 2: deterministic winner = max point-index among depth-ties
+    is_front = valid & (z <= zbuf[flat] + depth_eps)
+    idx = jnp.arange(n, dtype=jnp.int32)
+    winner = jnp.full((n + 1,), -1, jnp.int32).at[
+        jnp.where(is_front, flat, n)].max(idx)
+
+    src = winner[:n]  # for each target pixel: source point index or -1
+    has = src >= 0
+    src_c = jnp.maximum(src, 0)
+    rgb = jnp.where(has[:, None], rgb_ref.reshape(-1, 3)[src_c], 0.0)
+    depth = jnp.where(has, zbuf[:n], jnp.inf)
+    ang = jnp.where(has, angle[src_c], 0.0)
+    return WarpResult(
+        rgb=rgb.reshape(h, w, 3),
+        depth=depth.reshape(h, w),
+        holes=~has.reshape(h, w),
+        warp_angle=ang.reshape(h, w),
+    )
+
+
+def combine(warped: WarpResult, sparse_rgb: jnp.ndarray, holes: jnp.ndarray
+            ) -> jnp.ndarray:
+    """Eq. 4: F_tgt = F'_tgt ⊛ Γ_sp — fill holes with sparse NeRF output."""
+    return jnp.where(holes[..., None], sparse_rgb, warped.rgb)
+
+
+def hole_fraction(holes: jnp.ndarray) -> jnp.ndarray:
+    return holes.mean()

@@ -1,0 +1,3 @@
+from repro.kernels import flash_attention, fused_nerf_mlp, gather_trilerp, ops, ref
+
+__all__ = ["flash_attention", "fused_nerf_mlp", "gather_trilerp", "ops", "ref"]

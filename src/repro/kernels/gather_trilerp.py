@@ -1,0 +1,66 @@
+"""Pallas TPU kernel: the Gathering Unit (paper §IV-B/C) adapted to TPU.
+
+One grid step = one MVoxel (the paper's streaming unit). The MVoxel's halo
+feature block is staged HBM→VMEM by the Pallas pipeline (which double-buffers
+— literally the paper's "standard double buffer" §IV-A), and the RIT-assigned
+ray samples for that MVoxel are processed while it is resident.
+
+TPU adaptation of the GU (DESIGN.md §2):
+* channel-major layout  → channels on the minor (128-lane) axis of the VMEM
+  tile; concurrent lanes each own a channel — the bank-conflict-free layout.
+* crossbar-free gather  → gather-as-matmul: an 8-way one-hot select matrix
+  (built with broadcasted_iota compares, no scatter/crossbar) contracted with
+  the resident feature block on the MXU. The B×M trilerp reducers become one
+  [cap, P] × [P, C] matmul per corner.
+
+Shapes (padded by ops.py to sublane/lane multiples):
+  mv_table [num_mv, P, C]   — P = (edge+1)^3 halo points, C channels
+  ids      [num_mv, cap, 8] — per-sample local vertex ids (pad rows: 0)
+  weights  [num_mv, cap, 8] — trilerp weights (pad rows: 0 ⇒ output row 0)
+  out      [num_mv, cap, C]
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _kernel(tbl_ref, ids_ref, w_ref, out_ref):
+    tbl = tbl_ref[0]  # [P, C] — resident MVoxel (channel-major: C on lanes)
+    ids = ids_ref[0]  # [cap, 8]
+    w = w_ref[0]  # [cap, 8]
+    cap = ids.shape[0]
+    p = tbl.shape[0]
+    iota_p = jax.lax.broadcasted_iota(jnp.int32, (1, p), 1)  # [1, P]
+    acc = jnp.zeros((cap, tbl.shape[1]), jnp.float32)
+    for v in range(8):  # 8 voxel corners — static unroll (the GU's 8 cycles)
+        onehot = (ids[:, v : v + 1] == iota_p).astype(jnp.float32)  # [cap, P]
+        sel = onehot * w[:, v : v + 1]
+        acc = acc + jax.lax.dot(sel, tbl,
+                                preferred_element_type=jnp.float32)  # MXU
+    out_ref[0] = acc.astype(out_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def gather_trilerp_mvoxels(mv_table: jnp.ndarray, ids: jnp.ndarray,
+                           weights: jnp.ndarray, *, interpret: bool = True
+                           ) -> jnp.ndarray:
+    """Run the GU kernel over all MVoxels. Returns [num_mv, cap, C]."""
+    num_mv, p, c = mv_table.shape
+    cap = ids.shape[1]
+    return pl.pallas_call(
+        _kernel,
+        grid=(num_mv,),
+        in_specs=[
+            # stream one MVoxel halo block per grid step (auto double-buffered)
+            pl.BlockSpec((1, p, c), lambda i: (i, 0, 0)),
+            pl.BlockSpec((1, cap, 8), lambda i: (i, 0, 0)),
+            pl.BlockSpec((1, cap, 8), lambda i: (i, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, cap, c), lambda i: (i, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((num_mv, cap, c), mv_table.dtype),
+        interpret=interpret,
+    )(mv_table, ids, weights)

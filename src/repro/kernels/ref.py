@@ -1,0 +1,42 @@
+"""Pure-jnp oracles for every Pallas kernel (the allclose ground truth)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.nerf import grids
+
+
+def gather_trilerp_ref(table: jnp.ndarray, ids: jnp.ndarray,
+                       weights: jnp.ndarray) -> jnp.ndarray:
+    """out[s] = sum_v w[s,v] * table[ids[s,v]]  — table [P,C]."""
+    return grids.gather_trilerp_ref(table, ids, weights)
+
+
+def nerf_mlp_ref(feats: jnp.ndarray, direnc: jnp.ndarray, w1, b1, w2, b2,
+                 w_sigma, w_rgb, b_rgb) -> jnp.ndarray:
+    h = jnp.maximum(feats @ w1 + b1, 0.0)
+    h = jnp.maximum(h @ w2 + b2, 0.0)
+    sigma = jax.nn.softplus(h @ w_sigma)
+    rgb = jax.nn.sigmoid(jnp.concatenate([h, direnc], -1) @ w_rgb + b_rgb)
+    return jnp.concatenate([sigma, rgb], axis=-1)
+
+
+def attention_ref(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray, *,
+                  causal: bool = True, sm_scale: float | None = None
+                  ) -> jnp.ndarray:
+    """q [B,H,Sq,D], k/v [B,KVH,Sk,D] — GQA by head repeat. fp32 softmax."""
+    b, h, sq, d = q.shape
+    kvh = k.shape[1]
+    if sm_scale is None:
+        sm_scale = d**-0.5
+    k = jnp.repeat(k, h // kvh, axis=1)
+    v = jnp.repeat(v, h // kvh, axis=1)
+    s = jnp.einsum("bhqd,bhkd->bhqk", q.astype(jnp.float32),
+                   k.astype(jnp.float32)) * sm_scale
+    if causal:
+        sk = k.shape[2]
+        mask = jnp.arange(sq)[:, None] + (sk - sq) >= jnp.arange(sk)[None, :]
+        s = jnp.where(mask, s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bhqk,bhkd->bhqd", p, v.astype(jnp.float32)).astype(q.dtype)

@@ -1,0 +1,36 @@
+"""Production meshes. A FUNCTION (not module-level state) so importing this
+module never touches jax device state.
+
+Single pod: (16, 16) = (data, model) — 256 chips (one v5e pod).
+Multi pod:  (2, 16, 16) = (pod, data, model) — 512 chips; ``pod`` composes
+with ``data`` for DP by default, or acts as the pipeline axis under --pp=pod.
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    need = math.prod(shape)
+    devices = jax.devices()
+    if len(devices) < need:
+        raise RuntimeError(
+            f"mesh {shape} needs {need} devices, have {len(devices)} — run "
+            "under launch/dryrun.py (it forces 512 host devices) or real pods")
+    import numpy as np
+
+    dev_array = np.asarray(devices[:need]).reshape(shape)
+    return jax.sharding.Mesh(dev_array, axes)
+
+
+def make_smoke_mesh():
+    """Whatever devices exist (CPU: 1) on a (data, model) grid — used by
+    smoke tests so the same sharding code paths execute."""
+    n = len(jax.devices())
+    return jax.sharding.Mesh(
+        __import__("numpy").asarray(jax.devices()).reshape(n, 1),
+        ("data", "model"))

@@ -1,0 +1,3 @@
+from repro.models import attention, blocks, common, ffn, lm, mamba, moe, xlstm
+
+__all__ = ["attention", "blocks", "common", "ffn", "lm", "mamba", "moe", "xlstm"]

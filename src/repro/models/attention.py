@@ -1,0 +1,294 @@
+"""GQA attention: RoPE, banded (chunked-local) masks, KV cache, cross-attn.
+
+Memory discipline (what makes 32k-prefill lowerable at scale): scores are
+never materialized [S, S] — queries are processed in blocks via ``lax.scan``;
+full attention keeps a [blk, S] row block, local attention dynamic-slices a
+[blk, window+blk] KV band (truly sub-quadratic — llama4-style iRoPE chunked
+attention). Softmax in fp32.
+"""
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import ModelConfig
+from repro.models.common import DP, TP, ninit, shard
+
+NEG_INF = -1e30
+
+
+# ---------------------------------------------------------------------------
+# params
+# ---------------------------------------------------------------------------
+
+
+def attn_init(key, cfg: ModelConfig, dtype, cross: bool = False) -> dict:
+    d, h, kvh, hd = cfg.d_model, cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+    ks = jax.random.split(key, 4)
+    s = d**-0.5
+    p = {
+        "wq": ninit(ks[0], (d, h * hd), s, dtype),
+        "wk": ninit(ks[1], (d, kvh * hd), s, dtype),
+        "wv": ninit(ks[2], (d, kvh * hd), s, dtype),
+        "wo": ninit(ks[3], (h * hd, d), (h * hd) ** -0.5, dtype),
+    }
+    if cfg.qkv_bias and not cross:
+        p["bq"] = jnp.zeros((h * hd,), dtype)
+        p["bk"] = jnp.zeros((kvh * hd,), dtype)
+        p["bv"] = jnp.zeros((kvh * hd,), dtype)
+    return p
+
+
+def attn_specs(cfg: ModelConfig, cross: bool = False) -> dict:
+    # head (output-feature) axis over TP — Megatron column-parallel qkv,
+    # row-parallel wo
+    p = {"wq": P(None, TP), "wk": P(None, TP), "wv": P(None, TP),
+         "wo": P(TP, None)}
+    if cfg.qkv_bias and not cross:
+        p.update({"bq": P(TP), "bk": P(TP), "bv": P(TP)})
+    return p
+
+
+# ---------------------------------------------------------------------------
+# RoPE
+# ---------------------------------------------------------------------------
+
+
+def rope(x: jnp.ndarray, positions: jnp.ndarray, theta: float) -> jnp.ndarray:
+    """x [B, S, H, D]; positions [B, S]."""
+    d = x.shape[-1]
+    half = d // 2
+    freqs = theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    ang = positions[..., None].astype(jnp.float32) * freqs  # [B,S,half]
+    cos = jnp.cos(ang)[:, :, None, :]
+    sin = jnp.sin(ang)[:, :, None, :]
+    x1, x2 = x[..., :half], x[..., half:]
+    out = jnp.concatenate(
+        [x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# core softmax attention over a KV block (fp32)
+# ---------------------------------------------------------------------------
+
+
+def _sdpa(q, k, v, mask, sm_scale, softcap: float = 0.0):
+    """q [B,H,Lq,D], k/v [B,KVH,Lk,D], mask [B,1,Lq,Lk] bool or None.
+
+    GQA is expressed as a *static head-index gather* (h → h // group) instead
+    of a [B,KVH,G,...] reshape: every tensor stays 4D with heads on axis 1 so
+    the TP sharding propagates cleanly (the 5D reshape made GSPMD fall back to
+    'involuntary full rematerialization' replication on 16-way meshes)."""
+    b, h, lq, dh = q.shape
+    kvh = k.shape[1]
+    if kvh != h:
+        idx = jnp.arange(h) // (h // kvh)
+        k = k[:, idx]
+        v = v[:, idx]
+    s = jnp.einsum("bhqd,bhld->bhql", q.astype(jnp.float32),
+                   k.astype(jnp.float32)) * sm_scale
+    if softcap > 0:
+        s = softcap * jnp.tanh(s / softcap)
+    if mask is not None:
+        s = jnp.where(mask, s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bhql,bhld->bhqd", p, v.astype(jnp.float32))
+    return o.astype(q.dtype)
+
+
+# ---------------------------------------------------------------------------
+# forward paths
+# ---------------------------------------------------------------------------
+
+
+class KVCache(NamedTuple):
+    k: jnp.ndarray  # [B, KVH, S_max, D]
+    v: jnp.ndarray  # [B, KVH, S_max, D]
+
+
+def _project_qkv(params, x, cfg: ModelConfig, positions):
+    b, s, _ = x.shape
+    h, kvh, hd = cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+    q = x @ params["wq"]
+    k = x @ params["wk"]
+    v = x @ params["wv"]
+    if "bq" in params:
+        q, k, v = q + params["bq"], k + params["bk"], v + params["bv"]
+    q = q.reshape(b, s, h, hd)
+    k = k.reshape(b, s, kvh, hd)
+    v = v.reshape(b, s, kvh, hd)
+    if positions is not None:  # NoPE layers (llama4 global) pass None
+        q = rope(q, positions, cfg.rope_theta)
+        k = rope(k, positions, cfg.rope_theta)
+    return q, k, v
+
+
+def _blocked_attn(q, k, v, cfg: ModelConfig, *, local: bool, q_block: int,
+                  causal: bool = True) -> jnp.ndarray:
+    """q/k/v [B, H(kv), S, D] -> [B, H, S, D] without [S,S] scores."""
+    b, h, s, hd = q.shape
+    sm = cfg.head_dim**-0.5
+    blk = min(q_block, s)
+    if s % blk != 0:  # tiny smoke shapes
+        blk = s
+    nblk = s // blk
+    window = cfg.local_window if local else s
+    banded = local and window + blk < s
+
+    def body(_, qi):
+        q_start = qi * blk
+        q_blk = jax.lax.dynamic_slice_in_dim(q, q_start, blk, axis=2)
+        if banded:
+            kv_len = window + blk
+            kv_start = jnp.clip(q_start + blk - kv_len, 0, s - kv_len)
+            k_blk = jax.lax.dynamic_slice_in_dim(k, kv_start, kv_len, axis=2)
+            v_blk = jax.lax.dynamic_slice_in_dim(v, kv_start, kv_len, axis=2)
+            kpos = kv_start + jnp.arange(kv_len)[None, :]
+        else:
+            k_blk, v_blk = k, v
+            kpos = jnp.arange(s)[None, :]
+        qpos = q_start + jnp.arange(blk)[:, None]
+        mask = qpos >= kpos if causal else jnp.ones_like(qpos >= kpos)
+        if local:
+            mask &= (qpos - kpos) < window
+        o = _sdpa(q_blk, k_blk, v_blk, mask[None, None], sm, cfg.logit_softcap)
+        return None, o
+
+    _, outs = jax.lax.scan(body, None, jnp.arange(nblk))
+    return jnp.moveaxis(outs, 0, 2).reshape(b, h, s, hd)  # [B,H,S,D]
+
+
+def attn_train(params, x, cfg: ModelConfig, *, local: bool = False,
+               q_block: int = 0, positions=None, causal: bool = True
+               ) -> jnp.ndarray:
+    """(Bidirectional-capable) self-attention for train/prefill. x [B,S,D]."""
+    out, _ = _attn_fwd(params, x, cfg, local=local,
+                       q_block=q_block or cfg.q_block,
+                       positions=positions, cache_len=None, causal=causal)
+    return out
+
+
+def _attn_fwd(params, x, cfg: ModelConfig, *, local, q_block, positions,
+              cache_len: Optional[int], causal: bool = True):
+    b, s, _ = x.shape
+    if positions is None:
+        positions = jnp.broadcast_to(jnp.arange(s)[None], (b, s))
+    q, k, v = _project_qkv(params, x, cfg, positions)
+    q = q.transpose(0, 2, 1, 3)  # [B,H,S,D]
+    k = k.transpose(0, 2, 1, 3)  # [B,KVH,S,D]
+    v = v.transpose(0, 2, 1, 3)
+    q = shard(q, P(DP, TP, None, None))
+    k = shard(k, P(DP, TP, None, None))
+    o = _blocked_attn(q, k, v, cfg, local=local, q_block=q_block,
+                      causal=causal)
+    o = o.transpose(0, 2, 1, 3).reshape(b, s, cfg.num_heads * cfg.head_dim)
+    out = o @ params["wo"]
+    cache = None
+    if cache_len is not None:
+        if local and cfg.local_window < cache_len:
+            # windowed layers keep a ring buffer of the last `window` KVs
+            width = cfg.local_window
+            kc = k[:, :, -width:, :]
+            vc = v[:, :, -width:, :]
+            pad = width - kc.shape[2]
+        else:
+            kc, vc, pad = k, v, cache_len - s
+        kc = jnp.pad(kc, ((0, 0), (0, 0), (0, max(pad, 0)), (0, 0)))
+        vc = jnp.pad(vc, ((0, 0), (0, 0), (0, max(pad, 0)), (0, 0)))
+        cache = KVCache(kc, vc)
+    return out, cache
+
+
+def attn_prefill(params, x, cfg: ModelConfig, cache_len: int, *,
+                 local: bool = False, positions=None, q_block: int = 0
+                 ) -> Tuple[jnp.ndarray, KVCache]:
+    """Prefill: like train but also returns a KV cache of size cache_len."""
+    return _attn_fwd(params, x, cfg, local=local,
+                     q_block=q_block or cfg.q_block,
+                     positions=positions, cache_len=cache_len)
+
+
+def attn_decode(params, x, cfg: ModelConfig, cache: KVCache, index,
+                *, local: bool = False, positions=None
+                ) -> Tuple[jnp.ndarray, KVCache]:
+    """One-token decode against a KV cache. x [B, 1, D]; index scalar int."""
+    b = x.shape[0]
+    if positions is None:
+        positions = jnp.broadcast_to(index[None, None], (b, 1))
+    q, k, v = _project_qkv(params, x, cfg, positions)
+    q = q.transpose(0, 2, 1, 3)  # [B,H,1,D]
+    knew = k.transpose(0, 2, 1, 3)  # [B,KVH,1,D]
+    vnew = v.transpose(0, 2, 1, 3)
+    s_max = cache.k.shape[2]
+    if local and cfg.local_window < s_max:
+        # ring buffer for windowed layers: KV cache only `window` wide
+        slot = index % cache.k.shape[2]
+    else:
+        slot = index
+    kc = jax.lax.dynamic_update_slice_in_dim(cache.k, knew.astype(cache.k.dtype),
+                                             slot, axis=2)
+    vc = jax.lax.dynamic_update_slice_in_dim(cache.v, vnew.astype(cache.v.dtype),
+                                             slot, axis=2)
+    kpos = jnp.arange(kc.shape[2])[None, :]
+    if local and cfg.local_window < s_max:
+        valid = kpos <= index  # ring: all slots valid once warm; index-gated
+        valid = valid | (index >= kc.shape[2])
+    else:
+        valid = kpos <= index
+    # Grouped-query einsum WITHOUT expanding KV to full heads: the head
+    # gather forces GSPMD to replicate seq-sharded caches (gather outputs
+    # lose their sharding); grouping the tiny q instead keeps the cache
+    # layout untouched — the flash-decode pattern.
+    kvh = kc.shape[1]
+    g = cfg.num_heads // kvh
+    sm = cfg.head_dim**-0.5
+    qg = q.reshape(b, kvh, g, cfg.head_dim).astype(jnp.float32)
+    s = jnp.einsum("bkgd,bkld->bkgl", qg, kc.astype(jnp.float32)) * sm
+    if cfg.logit_softcap > 0:
+        s = cfg.logit_softcap * jnp.tanh(s / cfg.logit_softcap)
+    s = jnp.where(valid[:, None, None, :], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bkgl,bkld->bkgd", p, vc.astype(jnp.float32))
+    o = o.reshape(b, 1, cfg.num_heads * cfg.head_dim).astype(x.dtype)
+    return o @ params["wo"], KVCache(kc, vc)
+
+
+def cross_attn(params, x, enc_kv: KVCache, cfg: ModelConfig) -> jnp.ndarray:
+    """Encoder-decoder cross attention (no mask, no RoPE). x [B, S, D]."""
+    b, s, _ = x.shape
+    h, hd = cfg.num_heads, cfg.head_dim
+    q = (x @ params["wq"]).reshape(b, s, h, hd).transpose(0, 2, 1, 3)
+    o = _sdpa(q, enc_kv.k, enc_kv.v, None, hd**-0.5)
+    o = o.transpose(0, 2, 1, 3).reshape(b, s, h * hd)
+    return o @ params["wo"]
+
+
+def encode_cross_kv(params, enc_out: jnp.ndarray, cfg: ModelConfig) -> KVCache:
+    """Project encoder states into a layer's cross-attention KV (computed
+    once at prefill, reused every decode step — the SPARW-style reuse)."""
+    b, s, _ = enc_out.shape
+    kvh, hd = cfg.num_kv_heads, cfg.head_dim
+    k = (enc_out @ params["wk"]).reshape(b, s, kvh, hd).transpose(0, 2, 1, 3)
+    v = (enc_out @ params["wv"]).reshape(b, s, kvh, hd).transpose(0, 2, 1, 3)
+    return KVCache(k, v)
+
+
+def kv_cache_init(cfg: ModelConfig, batch: int, s_max: int, dtype,
+                  local: bool = False) -> KVCache:
+    width = min(cfg.local_window, s_max) if local else s_max
+    shape = (batch, cfg.num_kv_heads, width, cfg.head_dim)
+    return KVCache(jnp.zeros(shape, dtype), jnp.zeros(shape, dtype))
+
+
+def kv_cache_specs() -> KVCache:
+    """Batch over DP, *sequence* over the model axis (flash-decode layout):
+    kv-head counts (8) rarely divide a 16-way model axis, while the cache
+    sequence always does; attention over seq-sharded KV costs only tiny
+    (max, denom, partial-out) all-reduces — GSPMD emits the tree-decode
+    pattern automatically."""
+    return KVCache(P(DP, None, TP, None), P(DP, None, TP, None))

@@ -1,0 +1,308 @@
+"""Layer/period composition: LayerSpec → params/specs/forward, stacked scan.
+
+A model = ``num_periods`` repeats of a heterogeneous *period* (tuple of
+LayerSpecs). Period parameters are stacked on a leading axis and consumed by
+``jax.lax.scan`` (xs), so the lowered HLO contains ONE period regardless of
+depth — compile-time sanity for 72-layer models on 512-way SPMD, and the
+remat unit for training.
+
+Caches are pytrees mirroring the period structure; scan threads them as
+(xs → ys) so decode updates stay O(period) in HLO too.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import LayerSpec, ModelConfig
+from repro.models import attention as attn
+from repro.models import ffn as ffn_mod
+from repro.models import mamba as mamba_mod
+from repro.models import moe as moe_mod
+from repro.models import xlstm as xlstm_mod
+from repro.models.common import (DP, TP, dtype_of, rmsnorm, rmsnorm_init,
+                                 rmsnorm_specs, shard)
+
+PyTree = Any
+
+
+# ---------------------------------------------------------------------------
+# single layer
+# ---------------------------------------------------------------------------
+
+
+def layer_init(key, cfg: ModelConfig, spec: LayerSpec, dtype,
+               cross: bool = False) -> dict:
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    p = {"norm1": rmsnorm_init(cfg.d_model, dtype)}
+    if spec.mixer == "attn":
+        p["mixer"] = attn.attn_init(k1, cfg, dtype)
+    elif spec.mixer == "mamba":
+        p["mixer"] = mamba_mod.mamba_init(k1, cfg, dtype)
+    elif spec.mixer == "mlstm":
+        p["mixer"] = xlstm_mod.mlstm_init(k1, cfg, dtype)
+    elif spec.mixer == "slstm":
+        p["mixer"] = xlstm_mod.slstm_init(k1, cfg, dtype)
+    else:
+        raise ValueError(spec.mixer)
+    if cross:
+        p["norm_x"] = rmsnorm_init(cfg.d_model, dtype)
+        p["cross"] = attn.attn_init(k4, cfg, dtype, cross=True)
+    if spec.ffn != "none":
+        p["norm2"] = rmsnorm_init(cfg.d_model, dtype)
+        p["ffn"] = (moe_mod.moe_init(k2, cfg, dtype) if spec.ffn == "moe"
+                    else ffn_mod.ffn_init(k3, cfg.d_model, cfg.d_ff, dtype))
+    return p
+
+
+def layer_specs(cfg: ModelConfig, spec: LayerSpec, cross: bool = False) -> dict:
+    p = {"norm1": rmsnorm_specs()}
+    if spec.mixer == "attn":
+        p["mixer"] = attn.attn_specs(cfg)
+    elif spec.mixer == "mamba":
+        p["mixer"] = mamba_mod.mamba_specs(cfg)
+    elif spec.mixer == "mlstm":
+        p["mixer"] = xlstm_mod.mlstm_specs(cfg)
+    elif spec.mixer == "slstm":
+        p["mixer"] = xlstm_mod.slstm_specs(cfg)
+    if cross:
+        p["norm_x"] = rmsnorm_specs()
+        p["cross"] = attn.attn_specs(cfg, cross=True)
+    if spec.ffn != "none":
+        p["norm2"] = rmsnorm_specs()
+        p["ffn"] = (moe_mod.moe_specs(cfg) if spec.ffn == "moe"
+                    else ffn_mod.ffn_specs())
+    return p
+
+
+def _ffn_apply(p, x, cfg, spec: LayerSpec):
+    if spec.ffn == "none":
+        return x, 0.0
+    h = rmsnorm(p["norm2"], x, cfg.norm_eps)
+    if spec.ffn == "moe":
+        y, aux = moe_mod.moe(p["ffn"], h, cfg)
+    else:
+        y, aux = ffn_mod.ffn(p["ffn"], h), 0.0
+    return x + y, aux
+
+
+def layer_train(p, x, cfg: ModelConfig, spec: LayerSpec, *,
+                enc_out: Optional[jnp.ndarray] = None, causal: bool = True
+                ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    h = rmsnorm(p["norm1"], x, cfg.norm_eps)
+    if spec.mixer == "attn":
+        y = attn.attn_train(p["mixer"], h, cfg, local=spec.attn_kind == "local",
+                            causal=causal)
+    elif spec.mixer == "mamba":
+        y, _ = mamba_mod.mamba_chunked(p["mixer"], h, cfg)
+    elif spec.mixer == "mlstm":
+        y, _ = xlstm_mod.mlstm_chunked(p["mixer"], h, cfg)
+    else:
+        y, _ = xlstm_mod.slstm_scan(p["mixer"], h, cfg)
+    x = x + y
+    if "cross" in p and enc_out is not None:
+        hx = rmsnorm(p["norm_x"], x, cfg.norm_eps)
+        kv = attn.encode_cross_kv(p["cross"], enc_out, cfg)
+        x = x + attn.cross_attn(p["cross"], hx, kv, cfg)
+    return _ffn_apply(p, x, cfg, spec)
+
+
+def layer_prefill(p, x, cfg: ModelConfig, spec: LayerSpec, cache_len: int, *,
+                  enc_out: Optional[jnp.ndarray] = None):
+    """Returns (x, cache, aux). cache type depends on the mixer."""
+    h = rmsnorm(p["norm1"], x, cfg.norm_eps)
+    if spec.mixer == "attn":
+        y, cache = attn.attn_prefill(p["mixer"], h, cfg, cache_len,
+                                     local=spec.attn_kind == "local")
+    elif spec.mixer == "mamba":
+        y, cache = mamba_mod.mamba_chunked(p["mixer"], h, cfg)
+    elif spec.mixer == "mlstm":
+        y, cache = xlstm_mod.mlstm_chunked(p["mixer"], h, cfg)
+    else:
+        y, cache = xlstm_mod.slstm_scan(p["mixer"], h, cfg)
+    x = x + y
+    if "cross" in p and enc_out is not None:
+        hx = rmsnorm(p["norm_x"], x, cfg.norm_eps)
+        kv = attn.encode_cross_kv(p["cross"], enc_out, cfg)
+        x = x + attn.cross_attn(p["cross"], hx, kv, cfg)
+        cache = (cache, kv)  # cross-KV computed once, reused at decode
+    x, aux = _ffn_apply(p, x, cfg, spec)
+    return x, cache, aux
+
+
+def layer_decode(p, x, cfg: ModelConfig, spec: LayerSpec, cache, index):
+    """One-token step. Returns (x, new_cache)."""
+    cross_kv = None
+    if "cross" in p:
+        cache, cross_kv = cache
+    h = rmsnorm(p["norm1"], x, cfg.norm_eps)
+    if spec.mixer == "attn":
+        y, cache = attn.attn_decode(p["mixer"], h, cfg, cache, index,
+                                    local=spec.attn_kind == "local")
+    elif spec.mixer == "mamba":
+        y, cache = mamba_mod.mamba_decode(p["mixer"], h, cfg, cache)
+    elif spec.mixer == "mlstm":
+        y, cache = xlstm_mod.mlstm_scan(p["mixer"], h, cfg, cache)
+    else:
+        y, cache = xlstm_mod.slstm_scan(p["mixer"], h, cfg, cache)
+    x = x + y
+    if cross_kv is not None:
+        hx = rmsnorm(p["norm_x"], x, cfg.norm_eps)
+        x = x + attn.cross_attn(p["cross"], hx, cross_kv, cfg)
+        cache = (cache, cross_kv)
+    x, _ = _ffn_apply(p, x, cfg, spec)
+    return x, cache
+
+
+def layer_cache_init(cfg: ModelConfig, spec: LayerSpec, batch: int,
+                     s_max: int, dtype, cross: bool = False):
+    if spec.mixer == "attn":
+        c = attn.kv_cache_init(cfg, batch, s_max, dtype,
+                               local=spec.attn_kind == "local")
+    elif spec.mixer == "mamba":
+        c = mamba_mod.mamba_state_init(cfg, batch, dtype)
+    elif spec.mixer == "mlstm":
+        c = xlstm_mod.mlstm_state_init(cfg, batch)
+    else:
+        c = xlstm_mod.slstm_state_init(cfg, batch)
+    if cross:
+        enc_len = cfg.enc_seq_len or 1
+        kv_shape = (batch, cfg.num_kv_heads, enc_len, cfg.head_dim)
+        c = (c, attn.KVCache(jnp.zeros(kv_shape, dtype),
+                             jnp.zeros(kv_shape, dtype)))
+    return c
+
+
+def layer_cache_specs(cfg: ModelConfig, spec: LayerSpec, cross: bool = False,
+                      shard_seq: bool = False):
+    if spec.mixer == "attn":
+        if shard_seq:
+            # long-context decode (batch 1): KV sequence over every axis
+            sall = ("pod", "data", "model")
+            c = attn.KVCache(P(None, None, sall, None),
+                             P(None, None, sall, None))
+        else:
+            c = attn.kv_cache_specs()
+    elif spec.mixer == "mamba":
+        c = mamba_mod.mamba_state_specs()
+    elif spec.mixer == "mlstm":
+        c = xlstm_mod.mlstm_state_specs()
+    else:
+        c = xlstm_mod.slstm_state_specs()
+    if cross:
+        c = (c, attn.KVCache(P(DP, TP, None, None), P(DP, TP, None, None)))
+    return c
+
+
+# ---------------------------------------------------------------------------
+# period stack (scan over depth)
+# ---------------------------------------------------------------------------
+
+
+def stack_init(key, cfg: ModelConfig, dtype, cross: bool = False) -> PyTree:
+    """Stacked period params: leaves have leading axis num_periods."""
+    def one_period(k):
+        ks = jax.random.split(k, cfg.period)
+        return tuple(layer_init(ks[i], cfg, s, dtype, cross=cross)
+                     for i, s in enumerate(cfg.layer_pattern))
+
+    keys = jax.random.split(key, cfg.num_periods)
+    return jax.vmap(one_period)(keys)
+
+
+def stack_specs(cfg: ModelConfig, cross: bool = False) -> PyTree:
+    def add_stack_axis(spec: P) -> P:
+        return P(None, *spec)
+
+    per = tuple(layer_specs(cfg, s, cross=cross) for s in cfg.layer_pattern)
+    return jax.tree.map(add_stack_axis, per,
+                        is_leaf=lambda x: isinstance(x, P))
+
+
+def stack_train(params: PyTree, x: jnp.ndarray, cfg: ModelConfig, *,
+                enc_out=None, causal: bool = True
+                ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Scan the stacked periods. Returns (x, aux_loss_sum)."""
+
+    def period_fwd(x, period_params):
+        aux_total = 0.0
+        for i, spec in enumerate(cfg.layer_pattern):
+            x, aux = layer_train(period_params[i], x, cfg, spec,
+                                 enc_out=enc_out, causal=causal)
+            aux_total = aux_total + aux
+        # Megatron-SP: the scan carry (the only activation saved per period
+        # under full remat) lives sequence-sharded over the model axis
+        x = shard(x, P(DP, TP, None))
+        return x, aux_total
+
+    if cfg.remat:
+        period_fwd = jax.checkpoint(
+            period_fwd, policy=jax.checkpoint_policies.nothing_saveable)
+
+    x, auxs = jax.lax.scan(period_fwd, x, params)
+    return x, jnp.sum(auxs)
+
+
+def stack_prefill(params: PyTree, x: jnp.ndarray, cfg: ModelConfig,
+                  cache_len: int, *, enc_out=None):
+    def period_fwd(x, period_params):
+        caches = []
+        for i, spec in enumerate(cfg.layer_pattern):
+            x, c, _ = layer_prefill(period_params[i], x, cfg, spec, cache_len,
+                                    enc_out=enc_out)
+            caches.append(c)
+        x = shard(x, P(DP, TP, None))  # Megatron-SP carry sharding
+        return x, tuple(caches)
+
+    x, caches = jax.lax.scan(period_fwd, x, params)
+    return x, caches
+
+
+def stack_decode(params: PyTree, x: jnp.ndarray, cfg: ModelConfig, caches,
+                 index):
+    """Caches ride the scan CARRY (sliced/updated per period) rather than
+    xs→ys: the while-loop carry aliases in place, so the multi-GB stacked KV
+    cache is never double-buffered (xs→ys held two full copies)."""
+
+    def period_fwd(carry, inp):
+        x, caches = carry
+        period_params, i = inp
+        period_caches = jax.tree.map(
+            lambda c: jax.lax.dynamic_index_in_dim(c, i, 0, keepdims=False),
+            caches)
+        new = []
+        for j, spec in enumerate(cfg.layer_pattern):
+            x, c = layer_decode(period_params[j], x, cfg, spec,
+                                period_caches[j], index)
+            new.append(c)
+        caches = jax.tree.map(
+            lambda c, n: jax.lax.dynamic_update_index_in_dim(
+                c, n.astype(c.dtype), i, 0),
+            caches, tuple(new))
+        return (x, caches), None
+
+    (x, caches), _ = jax.lax.scan(
+        period_fwd, (x, caches), (params, jnp.arange(cfg.num_periods)))
+    return x, caches
+
+
+def stack_cache_init(cfg: ModelConfig, batch: int, s_max: int, dtype,
+                     cross: bool = False) -> PyTree:
+    def one(spec):
+        return layer_cache_init(cfg, spec, batch, s_max, dtype, cross=cross)
+
+    per = tuple(one(s) for s in cfg.layer_pattern)
+    return jax.tree.map(
+        lambda l: jnp.broadcast_to(l, (cfg.num_periods, *l.shape)), per)
+
+
+def stack_cache_specs(cfg: ModelConfig, cross: bool = False,
+                      shard_seq: bool = False) -> PyTree:
+    per = tuple(layer_cache_specs(cfg, s, cross=cross, shard_seq=shard_seq)
+                for s in cfg.layer_pattern)
+    return jax.tree.map(lambda sp: P(None, *sp), per,
+                        is_leaf=lambda x: isinstance(x, P))

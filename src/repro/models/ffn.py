@@ -1,0 +1,27 @@
+"""Dense SwiGLU FFN (Megatron column→row parallel over the ``model`` axis)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import ModelConfig
+from repro.models.common import TP, ninit
+
+
+def ffn_init(key, d_model: int, d_ff: int, dtype) -> dict:
+    k1, k2, k3 = jax.random.split(key, 3)
+    return {
+        "wg": ninit(k1, (d_model, d_ff), d_model**-0.5, dtype),
+        "wu": ninit(k2, (d_model, d_ff), d_model**-0.5, dtype),
+        "wd": ninit(k3, (d_ff, d_model), d_ff**-0.5, dtype),
+    }
+
+
+def ffn_specs() -> dict:
+    return {"wg": P(None, TP), "wu": P(None, TP), "wd": P(TP, None)}
+
+
+def ffn(params: dict, x: jnp.ndarray) -> jnp.ndarray:
+    h = jax.nn.silu(x @ params["wg"]) * (x @ params["wu"])
+    return h @ params["wd"]

@@ -1,0 +1,188 @@
+"""Mamba-2-style selective SSM (S6/SSD) — jamba's sequence mixer.
+
+Training/prefill use the chunkwise-parallel SSD form (intra-chunk work is
+MXU matmuls; inter-chunk state [B, H, dh, N] carried by ``lax.scan``) — the
+streaming-native mixer: state walks the sequence once, in order (the paper's
+memory-centric discipline is the *default* here, noted in DESIGN.md §5).
+Decode is the O(1) recurrent update.
+
+Recurrence (per head h, scalar decay):
+  s_t = exp(A_h * dt_t) * s_{t-1} + dt_t * (B_t ⊗ x_t)      s ∈ R^{dh×N}
+  y_t = s_t · C_t + D_h * x_t
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import ModelConfig
+from repro.models.common import TP, ninit
+
+
+class MambaState(NamedTuple):
+    ssm: jnp.ndarray  # [B, H, dh, N]
+    conv: jnp.ndarray  # [B, d_conv-1, d_inner]
+
+
+def _dims(cfg: ModelConfig) -> Tuple[int, int, int, int]:
+    d_inner = cfg.mamba_expand * cfg.d_model
+    heads = cfg.num_heads
+    dh = d_inner // heads
+    return d_inner, heads, dh, cfg.mamba_d_state
+
+
+def mamba_init(key, cfg: ModelConfig, dtype) -> dict:
+    d = cfg.d_model
+    d_inner, h, dh, n = _dims(cfg)
+    ks = jax.random.split(key, 6)
+    return {
+        "in_proj": ninit(ks[0], (d, 2 * d_inner), d**-0.5, dtype),
+        "conv_w": ninit(ks[1], (cfg.mamba_d_conv, d_inner), 0.5, dtype),
+        "x_proj": ninit(ks[2], (d_inner, 2 * n + h), d_inner**-0.5, dtype),
+        "dt_bias": jnp.zeros((h,), jnp.float32),
+        "a_log": jnp.log(jnp.linspace(1.0, 16.0, h)).astype(jnp.float32),
+        "d_skip": jnp.ones((h,), jnp.float32),
+        "out_proj": ninit(ks[3], (d_inner, d), d_inner**-0.5, dtype),
+    }
+
+
+def mamba_specs(cfg: ModelConfig) -> dict:
+    return {
+        "in_proj": P(None, TP),
+        "conv_w": P(None, TP),
+        "x_proj": P(TP, None),
+        "dt_bias": P(None),
+        "a_log": P(None),
+        "d_skip": P(None),
+        "out_proj": P(TP, None),
+    }
+
+
+def _conv1d(x: jnp.ndarray, w: jnp.ndarray, prev: jnp.ndarray | None
+            ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Depthwise causal conv. x [B,S,Di]; w [K,Di]; prev [B,K-1,Di]."""
+    k = w.shape[0]
+    if prev is None:
+        prev = jnp.zeros((x.shape[0], k - 1, x.shape[2]), x.dtype)
+    xp = jnp.concatenate([prev, x], axis=1)
+    out = sum(xp[:, i : i + x.shape[1], :] * w[i] for i in range(k))
+    new_prev = xp[:, -(k - 1):, :] if k > 1 else prev
+    return out, new_prev
+
+
+def _gates(params, x, cfg: ModelConfig, conv_prev):
+    """Shared projection head. Returns (xin [B,S,H,dh], z, dt [B,S,H],
+    B_ssm [B,S,N], C_ssm [B,S,N], decay a [B,S,H], conv_state)."""
+    d_inner, h, dh, n = _dims(cfg)
+    proj = x @ params["in_proj"]
+    xin, z = jnp.split(proj, 2, axis=-1)
+    xin, conv_state = _conv1d(xin, params["conv_w"], conv_prev)
+    xin = jax.nn.silu(xin)
+    bcd = xin @ params["x_proj"]  # [B,S,2N+H]
+    b_ssm = bcd[..., :n].astype(jnp.float32)
+    c_ssm = bcd[..., n : 2 * n].astype(jnp.float32)
+    dt = jax.nn.softplus(bcd[..., 2 * n :].astype(jnp.float32)
+                         + params["dt_bias"])  # [B,S,H]
+    a = -jnp.exp(params["a_log"])  # [H]
+    decay = jnp.exp(dt * a)  # [B,S,H] in (0,1)
+    xh = xin.reshape(*xin.shape[:-1], h, dh)  # bf16; einsums promote to f32
+    return xh, z, dt, b_ssm, c_ssm, decay, conv_state
+
+
+def mamba_chunked(params, x: jnp.ndarray, cfg: ModelConfig, *,
+                  chunk: int = 256,
+                  state: MambaState | None = None
+                  ) -> Tuple[jnp.ndarray, MambaState]:
+    """Chunkwise-parallel SSD. x [B,S,D] -> (y [B,S,D], final state)."""
+    b, s, d = x.shape
+    d_inner, h, dh, n = _dims(cfg)
+    conv_prev = state.conv if state is not None else None
+    xh, z, dt, b_ssm, c_ssm, decay, conv_state = _gates(params, x, cfg, conv_prev)
+
+    l = min(chunk, s)
+    if s % l != 0:
+        l = s
+    nchunks = s // l
+
+    def to_chunks(t):
+        return t.reshape(b, nchunks, l, *t.shape[2:])
+
+    xh_c = to_chunks(xh)  # [B,C,L,H,dh]
+    b_c = to_chunks(b_ssm)  # [B,C,L,N]
+    c_c = to_chunks(c_ssm)
+    dt_c = to_chunks(dt)  # [B,C,L,H]
+    dec_c = to_chunks(decay)
+
+    s0 = (state.ssm if state is not None
+          else jnp.zeros((b, h, dh, n), jnp.float32))
+
+    def chunk_step(carry, inp):
+        st = carry  # [B,H,dh,N]
+        xc, bc, cc, dtc, dc = inp
+        logd = jnp.log(jnp.maximum(dc, 1e-30))  # [B,L,H]
+        cum = jnp.cumsum(logd, axis=1)  # decay from chunk start to t (incl.)
+        # intra-chunk: G[l,s] = (C_l·B_s) * exp(cum_l - cum_s) for s <= l
+        g = jnp.einsum("bln,bsn->bls", cc, bc)  # [B,L,L]
+        rel = cum[:, :, None, :] - cum[:, None, :, :]  # [B,L,S,H]
+        mask = jnp.tril(jnp.ones((l, l), bool))
+        # mask BEFORE exp: exp(+big) on masked entries would poison the
+        # backward pass (0 cotangent × inf = NaN through jnp.where)
+        w = jnp.exp(jnp.where(mask[None, :, :, None], rel, -1e30))
+        y_intra = jnp.einsum("bls,blsh,bshp,bsh->blhp", g, w, xc, dtc)
+        # incoming-state contribution: y_l += (C_l · st) * exp(cum_l)
+        y_state = jnp.einsum("bln,bhpn,blh->blhp", cc, st, jnp.exp(cum))
+        y = y_intra + y_state
+        # new state: st' = st * exp(cum_L) + sum_s exp(cum_L - cum_s) dt_s B_s x_s
+        tot = cum[:, -1:, :]  # [B,1,H]
+        wk = jnp.exp(tot - cum)  # [B,L,H]
+        st_new = (st * jnp.exp(tot)[:, 0, :, None, None]
+                  + jnp.einsum("bsh,bsn,bshp->bhpn", wk * dtc, bc, xc))
+        return st_new, y
+
+    inputs = (xh_c.transpose(1, 0, 2, 3, 4), b_c.transpose(1, 0, 2, 3),
+              c_c.transpose(1, 0, 2, 3), dt_c.transpose(1, 0, 2, 3),
+              dec_c.transpose(1, 0, 2, 3))
+    # remat the chunk body: the [B,L,L,H] intra-chunk weights are recomputed
+    # in backward instead of being saved once per chunk (O(chunks) memory)
+    chunk_step_ck = jax.checkpoint(
+        chunk_step, policy=jax.checkpoint_policies.nothing_saveable)
+    st_final, ys = jax.lax.scan(chunk_step_ck, s0, inputs)
+    y = ys.transpose(1, 0, 2, 3, 4).reshape(b, s, h, dh)
+    y = y + params["d_skip"][None, None, :, None] * xh
+    y = y.reshape(b, s, d_inner).astype(x.dtype)
+    y = y * jax.nn.silu(z)
+    out = y @ params["out_proj"]
+    return out, MambaState(st_final, conv_state)
+
+
+def mamba_decode(params, x: jnp.ndarray, cfg: ModelConfig, state: MambaState
+                 ) -> Tuple[jnp.ndarray, MambaState]:
+    """One-token recurrent update. x [B,1,D]."""
+    b, _, d = x.shape
+    d_inner, h, dh, n = _dims(cfg)
+    xh, z, dt, b_ssm, c_ssm, decay, conv_state = _gates(
+        params, x, cfg, state.conv)
+    # s_t = decay * s + dt * (B ⊗ x)
+    st = (state.ssm * decay[:, 0, :, None, None]
+          + jnp.einsum("bh,bn,bhp->bhpn", dt[:, 0], b_ssm[:, 0], xh[:, 0]))
+    y = jnp.einsum("bn,bhpn->bhp", c_ssm[:, 0], st)
+    y = y + params["d_skip"][None, :, None] * xh[:, 0]
+    y = y.reshape(b, 1, d_inner).astype(x.dtype) * jax.nn.silu(z)
+    return y @ params["out_proj"], MambaState(st, conv_state)
+
+
+def mamba_state_init(cfg: ModelConfig, batch: int, dtype=jnp.bfloat16
+                     ) -> MambaState:
+    d_inner, h, dh, n = _dims(cfg)
+    return MambaState(
+        ssm=jnp.zeros((batch, h, dh, n), jnp.float32),
+        conv=jnp.zeros((batch, cfg.mamba_d_conv - 1, d_inner), dtype),
+    )
+
+
+def mamba_state_specs() -> MambaState:
+    return MambaState(ssm=P(("pod", "data"), TP, None, None),
+                      conv=P(("pod", "data"), None, TP))

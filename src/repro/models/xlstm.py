@@ -1,0 +1,270 @@
+"""xLSTM blocks (arXiv:2405.04517): mLSTM (matrix memory, parallelizable)
+and sLSTM (scalar memory, inherently sequential — ``lax.scan``).
+
+mLSTM uses exponential gating with a stabilizer state m_t:
+  C_t = f~_t C_{t-1} + i~_t v_t k_t^T ,  n_t = f~_t n_{t-1} + i~_t k_t
+  h_t = o_t ⊙ (C_t q_t) / max(|n_t^T q_t|, 1)
+with i~ = exp(i - m_t), f~ = exp(log σ(f) + m_{t-1} - m_t).
+
+Both a step-recurrent reference (``mlstm_scan``) and a chunkwise-parallel
+form (``mlstm_chunked``, the production path — intra-chunk matmuls on the
+MXU, state carried across chunks) are provided and tested against each other.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import ModelConfig
+from repro.models.common import TP, ninit
+
+
+class MlstmState(NamedTuple):
+    c: jnp.ndarray  # [B, H, dh, dh]
+    n: jnp.ndarray  # [B, H, dh]
+    m: jnp.ndarray  # [B, H]
+
+
+class SlstmState(NamedTuple):
+    c: jnp.ndarray  # [B, D]
+    n: jnp.ndarray  # [B, D]
+    m: jnp.ndarray  # [B, D]
+    h: jnp.ndarray  # [B, D]
+
+
+# ---------------------------------------------------------------------------
+# mLSTM
+# ---------------------------------------------------------------------------
+
+
+def mlstm_init(key, cfg: ModelConfig, dtype) -> dict:
+    d = cfg.d_model
+    h = cfg.xlstm_heads
+    dh = d // h
+    ks = jax.random.split(key, 6)
+    return {
+        "wq": ninit(ks[0], (d, d), d**-0.5, dtype),
+        "wk": ninit(ks[1], (d, d), d**-0.5, dtype),
+        "wv": ninit(ks[2], (d, d), d**-0.5, dtype),
+        "wi": ninit(ks[3], (d, h), d**-0.5, jnp.float32),
+        "wf": ninit(ks[4], (d, h), d**-0.5, jnp.float32),
+        "bf": 3.0 * jnp.ones((h,), jnp.float32),  # forget-bias: long memory
+        "bi": jnp.zeros((h,), jnp.float32),
+        "wo_gate": ninit(ks[5], (d, d), d**-0.5, dtype),
+        "w_out": ninit(jax.random.fold_in(key, 7), (d, d), d**-0.5, dtype),
+    }
+
+
+def mlstm_specs(cfg: ModelConfig) -> dict:
+    return {"wq": P(None, TP), "wk": P(None, TP), "wv": P(None, TP),
+            "wi": P(None, None), "wf": P(None, None), "bf": P(None),
+            "bi": P(None), "wo_gate": P(None, TP), "w_out": P(TP, None)}
+
+
+def _mlstm_proj(params, x, cfg: ModelConfig):
+    b, s, d = x.shape
+    h = cfg.xlstm_heads
+    dh = d // h
+    to_heads = lambda t: t.reshape(b, s, h, dh).astype(jnp.float32)
+    q = to_heads(x @ params["wq"]) / jnp.sqrt(dh)
+    k = to_heads(x @ params["wk"]) / jnp.sqrt(dh)
+    v = to_heads(x @ params["wv"])
+    x32 = x.astype(jnp.float32)
+    i_pre = x32 @ params["wi"] + params["bi"]  # [B,S,H]
+    f_pre = x32 @ params["wf"] + params["bf"]
+    logf = jax.nn.log_sigmoid(f_pre)
+    ogate = jax.nn.sigmoid(x @ params["wo_gate"])
+    return q, k, v, i_pre, logf, ogate
+
+
+def mlstm_scan(params, x: jnp.ndarray, cfg: ModelConfig,
+               state: MlstmState | None = None
+               ) -> Tuple[jnp.ndarray, MlstmState]:
+    """Step-recurrent reference (and decode path). x [B,S,D]."""
+    b, s, d = x.shape
+    h = cfg.xlstm_heads
+    dh = d // h
+    q, k, v, i_pre, logf, ogate = _mlstm_proj(params, x, cfg)
+    if state is None:
+        state = mlstm_state_init(cfg, b)
+
+    def step(st: MlstmState, inp):
+        qt, kt, vt, it, lft = inp  # [B,H,dh] x3, [B,H] x2
+        m_new = jnp.maximum(lft + st.m, it)
+        fg = jnp.exp(lft + st.m - m_new)[..., None]
+        ig = jnp.exp(it - m_new)[..., None]
+        c = st.c * fg[..., None] + ig[..., None] * (
+            vt[..., :, None] * kt[..., None, :])  # [B,H,dh,dh]
+        n = st.n * fg + ig * kt
+        num = jnp.einsum("bhij,bhj->bhi", c, qt)
+        den = jnp.maximum(jnp.abs(jnp.einsum("bhj,bhj->bh", n, qt)),
+                          jnp.exp(-m_new))[..., None]
+        return MlstmState(c, n, m_new), num / den
+
+    xs = (q.transpose(1, 0, 2, 3), k.transpose(1, 0, 2, 3),
+          v.transpose(1, 0, 2, 3), i_pre.transpose(1, 0, 2),
+          logf.transpose(1, 0, 2))
+    st, hs = jax.lax.scan(step, state, xs)
+    hseq = hs.transpose(1, 0, 2, 3).reshape(b, s, d).astype(x.dtype)
+    out = (ogate * hseq) @ params["w_out"]
+    return out, st
+
+
+def mlstm_chunked(params, x: jnp.ndarray, cfg: ModelConfig, *,
+                  chunk: int = 128, state: MlstmState | None = None
+                  ) -> Tuple[jnp.ndarray, MlstmState]:
+    """Chunkwise-parallel mLSTM (production path). Matches mlstm_scan."""
+    b, s, d = x.shape
+    h = cfg.xlstm_heads
+    dh = d // h
+    q, k, v, i_pre, logf, ogate = _mlstm_proj(params, x, cfg)
+    if state is None:
+        state = mlstm_state_init(cfg, b)
+
+    l = min(chunk, s)
+    if s % l != 0:
+        l = s
+    nc = s // l
+    ch = lambda t: t.reshape(b, nc, l, *t.shape[2:]).transpose(
+        1, 0, *range(2, t.ndim + 1))
+    qs, ks_, vs = ch(q), ch(k), ch(v)
+    is_, lfs = ch(i_pre), ch(logf)
+
+    def chunk_step(st: MlstmState, inp):
+        qc, kc, vc, ic, lfc = inp  # [B,L,H,dh] x3, [B,L,H] x2
+        cumf = jnp.cumsum(lfc, axis=1)  # [B,L,H] log decay from chunk start
+        # stabilizer within chunk: log contribution of source s to target l is
+        # (cumf_l - cumf_s) + i_s  (s<=l); incoming state has log-scale
+        # m_prev + cumf_l
+        src = ic - cumf  # [B,L,H] (log weight of source s, minus common cumf_l)
+        run_max = jax.lax.associative_scan(jnp.maximum, src, axis=1)
+        m_loc = jnp.maximum(cumf + run_max, cumf + st.m[:, None, :])
+        m_new = m_loc  # per-position stabilizer [B,L,H]
+        # intra-chunk weights — mask before exp (NaN-safe backward)
+        logw = (cumf[:, :, None, :] - cumf[:, None, :, :]
+                + ic[:, None, :, :] - m_new[:, :, None, :])  # [B,L,S,H]
+        mask = jnp.tril(jnp.ones((l, l), bool))
+        wgt = jnp.exp(jnp.where(mask[None, :, :, None], logw, -1e30))
+        g = jnp.einsum("blhe,bshe->blsh", qc, kc)  # [B,L,S,H]
+        num_intra = jnp.einsum("blsh,blsh,bshe->blhe", g, wgt, vc)
+        den_intra = jnp.einsum("blsh,blsh->blh", g, wgt)
+        # incoming state contribution
+        sc_in = jnp.exp(cumf + st.m[:, None, :] - m_new)  # [B,L,H]
+        num_in = jnp.einsum("bhef,blhf->blhe", st.c, qc) * sc_in[..., None]
+        den_in = jnp.einsum("bhe,blhe->blh", st.n, qc) * sc_in
+        num = num_intra + num_in
+        den = jnp.maximum(jnp.abs(den_intra + den_in), jnp.exp(-m_new))
+        hc = num / den[..., None]
+        # carry state to the next chunk (stabilized at m_carry)
+        tot = cumf[:, -1, :]  # [B,H]
+        m_carry = jnp.maximum(tot + st.m,
+                              jnp.max(ic + tot[:, None, :] - cumf, axis=1))
+        w_in = jnp.exp(tot + st.m - m_carry)  # [B,H]
+        w_src = jnp.exp(ic + tot[:, None, :] - cumf - m_carry[:, None, :])
+        c_new = (st.c * w_in[..., None, None]
+                 + jnp.einsum("blh,blhe,blhf->bhef", w_src, vc, kc))
+        n_new = st.n * w_in[..., None] + jnp.einsum("blh,blhe->bhe", w_src, kc)
+        return MlstmState(c_new, n_new, m_carry), hc
+
+    chunk_step_ck = jax.checkpoint(
+        chunk_step, policy=jax.checkpoint_policies.nothing_saveable)
+    st, hs = jax.lax.scan(chunk_step_ck, state, (qs, ks_, vs, is_, lfs))
+    hseq = hs.transpose(1, 0, 2, 3, 4).reshape(b, s, d).astype(x.dtype)
+    out = (ogate * hseq) @ params["w_out"]
+    return out, st
+
+
+def mlstm_state_init(cfg: ModelConfig, batch: int) -> MlstmState:
+    h = cfg.xlstm_heads
+    dh = cfg.d_model // h
+    return MlstmState(
+        c=jnp.zeros((batch, h, dh, dh), jnp.float32),
+        n=jnp.zeros((batch, h, dh), jnp.float32),
+        m=jnp.full((batch, h), -1e30, jnp.float32),
+    )
+
+
+def mlstm_state_specs() -> MlstmState:
+    return MlstmState(c=P(("pod", "data"), None, None, None),
+                      n=P(("pod", "data"), None, None),
+                      m=P(("pod", "data"), None))
+
+
+# ---------------------------------------------------------------------------
+# sLSTM
+# ---------------------------------------------------------------------------
+
+
+def slstm_init(key, cfg: ModelConfig, dtype) -> dict:
+    d = cfg.d_model
+    ks = jax.random.split(key, 9)
+    w = lambda i: ninit(ks[i], (d, d), d**-0.5, jnp.float32)
+    r = lambda i: ninit(ks[i], (d, d), (4 * d) ** -0.5, jnp.float32)
+    return {
+        "wz": w(0), "wi": w(1), "wf": w(2), "wo": w(3),
+        "rz": r(4), "ri": r(5), "rf": r(6), "ro": r(7),
+        "bz": jnp.zeros((d,), jnp.float32),
+        "bi": jnp.zeros((d,), jnp.float32),
+        "bf": 3.0 * jnp.ones((d,), jnp.float32),
+        "bo": jnp.zeros((d,), jnp.float32),
+        "w_out": ninit(ks[8], (d, d), d**-0.5, dtype),
+    }
+
+
+def slstm_specs(cfg: ModelConfig) -> dict:
+    p = {k: P(None, None) for k in
+         ["wz", "wi", "wf", "wo", "rz", "ri", "rf", "ro"]}
+    p.update({k: P(None) for k in ["bz", "bi", "bf", "bo"]})
+    p["w_out"] = P(None, TP)
+    return p
+
+
+def slstm_scan(params, x: jnp.ndarray, cfg: ModelConfig,
+               state: SlstmState | None = None
+               ) -> Tuple[jnp.ndarray, SlstmState]:
+    """Sequential sLSTM (the xLSTM paper: not parallelizable). x [B,S,D]."""
+    b, s, d = x.shape
+    if state is None:
+        state = slstm_state_init(cfg, b)
+    x32 = x.astype(jnp.float32)
+    # input contributions precomputed in parallel; recurrence stays in scan
+    zi = x32 @ params["wz"] + params["bz"]
+    ii = x32 @ params["wi"] + params["bi"]
+    fi = x32 @ params["wf"] + params["bf"]
+    oi = x32 @ params["wo"] + params["bo"]
+
+    def step(st: SlstmState, inp):
+        zt, it, ft, ot = inp
+        z = jnp.tanh(zt + st.h @ params["rz"])
+        i_pre = it + st.h @ params["ri"]
+        f_pre = ft + st.h @ params["rf"]
+        o = jax.nn.sigmoid(ot + st.h @ params["ro"])
+        logf = jax.nn.log_sigmoid(f_pre)
+        m_new = jnp.maximum(logf + st.m, i_pre)
+        fg = jnp.exp(logf + st.m - m_new)
+        ig = jnp.exp(i_pre - m_new)
+        c = fg * st.c + ig * z
+        n = fg * st.n + ig
+        h = o * c / jnp.maximum(n, 1.0)
+        return SlstmState(c, n, m_new, h), h
+
+    xs = (zi.transpose(1, 0, 2), ii.transpose(1, 0, 2),
+          fi.transpose(1, 0, 2), oi.transpose(1, 0, 2))
+    st, hs = jax.lax.scan(step, state, xs)
+    out = hs.transpose(1, 0, 2).astype(x.dtype) @ params["w_out"]
+    return out, st
+
+
+def slstm_state_init(cfg: ModelConfig, batch: int) -> SlstmState:
+    d = cfg.d_model
+    z = jnp.zeros((batch, d), jnp.float32)
+    return SlstmState(c=z, n=z, m=jnp.full((batch, d), -1e30), h=z)
+
+
+def slstm_state_specs() -> SlstmState:
+    dp = ("pod", "data")
+    return SlstmState(c=P(dp, None), n=P(dp, None), m=P(dp, None),
+                      h=P(dp, None))

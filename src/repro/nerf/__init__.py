@@ -1,0 +1,3 @@
+from repro.nerf import grids, mlp, models, rays, scenes, train, volrend
+
+__all__ = ["grids", "mlp", "models", "rays", "scenes", "train", "volrend"]

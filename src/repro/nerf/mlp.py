@@ -1,0 +1,71 @@
+"""Feature Computation (``F``): decode gathered features into (sigma, rgb).
+
+Two decoders:
+* ``mlp``    — the paper's lightweight radiance MLP (the NPU workload).
+* ``direct`` — features already hold (sigma_raw, r, g, b); used by grids baked
+               from analytic scenes so quality experiments are deterministic.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclass(frozen=True)
+class DecoderCfg:
+    mode: str = "mlp"  # mlp | direct
+    in_channels: int = 8
+    hidden: int = 64
+    view_dirs: bool = True
+
+
+def _dir_enc(dirs: jnp.ndarray) -> jnp.ndarray:
+    """Cheap view-direction encoding: raw + 2nd order terms (9 dims)."""
+    x, y, z = dirs[:, 0:1], dirs[:, 1:2], dirs[:, 2:3]
+    return jnp.concatenate([dirs, x * y, y * z, x * z, x * x, y * y, z * z], axis=-1)
+
+
+def decoder_init(key: jax.Array, cfg: DecoderCfg) -> dict:
+    if cfg.mode == "direct":
+        return {}
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    d_in = cfg.in_channels
+    d_dir = 9 if cfg.view_dirs else 0
+    s = lambda *shape: 1.0 / jnp.sqrt(shape[0])
+    return {
+        "w1": jax.random.normal(k1, (d_in, cfg.hidden)) * s(d_in),
+        "b1": jnp.zeros((cfg.hidden,)),
+        "w2": jax.random.normal(k2, (cfg.hidden, cfg.hidden)) * s(cfg.hidden),
+        "b2": jnp.zeros((cfg.hidden,)),
+        "w_sigma": jax.random.normal(k3, (cfg.hidden, 1)) * s(cfg.hidden),
+        "w_rgb": jax.random.normal(k4, (cfg.hidden + d_dir, 3)) * s(cfg.hidden + d_dir),
+        "b_rgb": jnp.zeros((3,)),
+    }
+
+
+def decode(params: dict, feats: jnp.ndarray, dirs: jnp.ndarray, cfg: DecoderCfg
+           ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """feats [S, C], dirs [S, 3] -> (sigma [S], rgb [S,3])."""
+    if cfg.mode == "direct":
+        sigma = jnp.maximum(feats[:, 0], 0.0)
+        rgb = jnp.clip(feats[:, 1:4], 0.0, 1.0)
+        return sigma, rgb
+    h = jax.nn.relu(feats @ params["w1"] + params["b1"])
+    h = jax.nn.relu(h @ params["w2"] + params["b2"])
+    sigma = jax.nn.softplus(h @ params["w_sigma"]).squeeze(-1)
+    rgb_in = jnp.concatenate([h, _dir_enc(dirs)], axis=-1) if cfg.view_dirs else h
+    rgb = jax.nn.sigmoid(rgb_in @ params["w_rgb"] + params["b_rgb"])
+    return sigma, rgb
+
+
+def decoder_flops(cfg: DecoderCfg) -> int:
+    """MACs*2 per ray sample — used by the cost model (NPU workload)."""
+    if cfg.mode == "direct":
+        return 8
+    d_dir = 9 if cfg.view_dirs else 0
+    macs = cfg.in_channels * cfg.hidden + cfg.hidden * cfg.hidden
+    macs += cfg.hidden + (cfg.hidden + d_dir) * 3
+    return 2 * macs

@@ -1,0 +1,161 @@
+"""NeRF models: grid representation + decoder + volume renderer.
+
+``NerfModel`` implements the paper's three-stage pipeline in the *pixel-centric*
+order (the baseline the paper starts from). The memory-centric / streaming
+order lives in ``repro.core.streaming`` and must produce identical images
+(tested). An ``OracleModel`` renders the analytic scene directly (exact depth,
+view-dependent radiance) and is used for warp-threshold experiments.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.nerf import grids, mlp, rays, scenes, volrend
+
+
+@dataclass(frozen=True)
+class NerfConfig:
+    kind: str  # dvgo | ngp | tensorf | oracle
+    grid_res: int = 64
+    channels: int = 8
+    hash_levels: int = 8
+    hash_table_size: int = 2**14
+    hash_base_res: int = 16
+    hash_max_res: int = 256
+    tensorf_rank: int = 8
+    decoder: str = "mlp"  # mlp | direct
+    mlp_hidden: int = 64
+    num_samples: int = 64
+    near: float = 0.5
+    far: float = 6.0
+    white_bkgd: bool = True
+
+    @property
+    def dense_cfg(self) -> grids.DenseGridCfg:
+        return grids.DenseGridCfg(res=self.grid_res, channels=self.channels)
+
+    @property
+    def hash_cfg(self) -> grids.HashGridCfg:
+        return grids.HashGridCfg(
+            num_levels=self.hash_levels,
+            base_res=self.hash_base_res,
+            max_res=self.hash_max_res,
+            table_size=self.hash_table_size,
+            channels=2,
+        )
+
+    @property
+    def tensorf_cfg(self) -> grids.TensoRFCfg:
+        return grids.TensoRFCfg(res=self.grid_res, rank=self.tensorf_rank,
+                                channels=self.channels)
+
+    @property
+    def feat_channels(self) -> int:
+        if self.kind == "ngp":
+            return self.hash_cfg.out_channels
+        return self.channels
+
+    @property
+    def decoder_cfg(self) -> mlp.DecoderCfg:
+        return mlp.DecoderCfg(mode=self.decoder, in_channels=self.feat_channels,
+                              hidden=self.mlp_hidden)
+
+    def feature_table_bytes(self) -> int:
+        """Model size (the paper's Fig. 2 x-axis): feature vectors only."""
+        if self.kind == "dvgo":
+            return self.grid_res**3 * self.channels * 4
+        if self.kind == "ngp":
+            return self.hash_levels * self.hash_table_size * 2 * 4
+        if self.kind == "tensorf":
+            return (3 * self.grid_res**2 * self.tensorf_rank + 3 * self.grid_res * self.tensorf_rank) * 4
+        return 0
+
+
+class NerfModel:
+    def __init__(self, cfg: NerfConfig, scene: Optional[scenes.Scene] = None):
+        self.cfg = cfg
+        self.scene = scene
+
+    # ------------------------------------------------------------------
+    def init(self, key: jax.Array) -> dict:
+        c = self.cfg
+        kg, kd = jax.random.split(key)
+        if c.kind == "dvgo":
+            params = grids.dense_init(kg, c.dense_cfg)
+        elif c.kind == "ngp":
+            params = grids.hash_init(kg, c.hash_cfg)
+        elif c.kind == "tensorf":
+            params = grids.tensorf_init(kg, c.tensorf_cfg)
+        elif c.kind == "oracle":
+            params = {}
+        else:
+            raise ValueError(c.kind)
+        params["decoder"] = mlp.decoder_init(kd, c.decoder_cfg)
+        return params
+
+    def init_baked(self, scene: scenes.Scene) -> dict:
+        """Dense grid baked from the analytic scene; decoder = direct."""
+        assert self.cfg.kind == "dvgo" and self.cfg.decoder == "direct"
+        table = scenes.bake_dense_table(scene, self.cfg.grid_res, self.cfg.channels)
+        return {"table": table, "decoder": {}}
+
+    # ------------------------------------------------------------------
+    def query_features(self, params: dict, points: jnp.ndarray) -> jnp.ndarray:
+        c = self.cfg
+        if c.kind == "dvgo":
+            return grids.dense_query(params, points, c.dense_cfg)
+        if c.kind == "ngp":
+            return grids.hash_query(params, points, c.hash_cfg)
+        if c.kind == "tensorf":
+            return grids.tensorf_query(params, points, c.tensorf_cfg)
+        raise ValueError(c.kind)
+
+    def query_field(self, params: dict, points: jnp.ndarray, dirs: jnp.ndarray
+                    ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+        """(sigma [S], rgb [S,3]) at sample points."""
+        if self.cfg.kind == "oracle":
+            assert self.scene is not None
+            return scenes.scene_density(self.scene, points), scenes.scene_radiance(
+                self.scene, points, dirs)
+        feats = self.query_features(params, points)
+        return mlp.decode(params["decoder"], feats, dirs, self.cfg.decoder_cfg)
+
+    # ------------------------------------------------------------------
+    def render_rays(self, params: dict, origins: jnp.ndarray, dirs: jnp.ndarray,
+                    key: Optional[jax.Array] = None
+                    ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+        """Pixel-centric rendering. Returns (color [R,3], depth [R])."""
+        c = self.cfg
+        pts, t_vals = rays.sample_along_rays(origins, dirs, c.near, c.far,
+                                             c.num_samples, key)
+        flat_pts = pts.reshape(-1, 3)
+        flat_dirs = jnp.repeat(dirs, c.num_samples, axis=0)
+        sigma, rgb = self.query_field(params, flat_pts, flat_dirs)
+        sigma = sigma.reshape(-1, c.num_samples)
+        rgb = rgb.reshape(-1, c.num_samples, 3)
+        color, depth, _ = volrend.composite(sigma, rgb, t_vals, c.far, c.white_bkgd)
+        return color, depth
+
+    def render_image(self, params: dict, cam: rays.Camera, c2w: jnp.ndarray,
+                     chunk: int = 1 << 14) -> Tuple[jnp.ndarray, jnp.ndarray]:
+        """Full-frame render (chunked over rays to bound memory)."""
+        o, d = rays.generate_rays(cam, c2w)
+        n = o.shape[0]
+        colors, depths = [], []
+        render = jax.jit(self.render_rays)
+        for i in range(0, n, chunk):
+            col, dep = render(params, o[i : i + chunk], d[i : i + chunk])
+            colors.append(col)
+            depths.append(dep)
+        color = jnp.concatenate(colors).reshape(cam.height, cam.width, 3)
+        depth = jnp.concatenate(depths).reshape(cam.height, cam.width)
+        return color, depth
+
+
+def make_model(kind: str, scene: Optional[scenes.Scene] = None, **kw) -> Tuple[NerfModel, NerfConfig]:
+    cfg = NerfConfig(kind=kind, **kw)
+    return NerfModel(cfg, scene=scene), cfg

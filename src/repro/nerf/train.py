@@ -1,0 +1,94 @@
+"""Fitting NeRF models to analytic scenes.
+
+Two paths:
+* ``fit_field``  — regress the grid+decoder against the analytic (sigma, rgb)
+  field at random points. Fast (no rendering in the loop); used to build the
+  hash / tensorf models for quality experiments.
+* ``train_images`` — classic photometric training against rendered GT images
+  (the end-to-end example driver uses this).
+"""
+from __future__ import annotations
+
+from typing import Callable, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.nerf import models, rays, scenes
+from repro.optim import AdamWConfig, adamw_init, adamw_update, cosine_warmup
+
+
+def fit_field(model: models.NerfModel, scene: scenes.Scene, key: jax.Array,
+              steps: int = 400, batch: int = 8192, lr: float = 5e-3) -> dict:
+    params = model.init(key)
+    opt_cfg = AdamWConfig(grad_clip_norm=0.0)
+    opt = adamw_init(params)
+
+    def loss_fn(p, pts, dirs, sig_t, rgb_t):
+        sig, rgb = model.query_field(p, pts, dirs)
+        # sigma in log1p space (large dynamic range), rgb weighted by presence
+        w = (sig_t > 1.0).astype(jnp.float32)[:, None]
+        l_sig = jnp.mean((jnp.log1p(sig) - jnp.log1p(sig_t)) ** 2)
+        l_rgb = jnp.sum(w * (rgb - rgb_t) ** 2) / (jnp.sum(w) * 3.0 + 1e-6)
+        return l_sig + l_rgb
+
+    @jax.jit
+    def step_fn(p, o, step, k):
+        kp, kd = jax.random.split(k)
+        pts = jax.random.uniform(kp, (batch, 3), minval=-1.0, maxval=1.0)
+        dirs = jax.random.normal(kd, (batch, 3))
+        dirs = dirs / jnp.linalg.norm(dirs, axis=-1, keepdims=True)
+        sig_t = scenes.scene_density(scene, pts)
+        rgb_t = scenes.scene_albedo(scene, pts)
+        loss, grads = jax.value_and_grad(loss_fn)(p, pts, dirs, sig_t, rgb_t)
+        lr_t = cosine_warmup(step, lr, 20, steps)
+        p, o = adamw_update(grads, p, o, step, opt_cfg, lr_t)
+        return p, o, loss
+
+    k = key
+    for s in range(steps):
+        k, sub = jax.random.split(k)
+        params, opt, loss = step_fn(params, opt, jnp.asarray(s), sub)
+    return params
+
+
+def train_images(model: models.NerfModel, gt_renderer: Callable, cam: rays.Camera,
+                 poses: jnp.ndarray, key: jax.Array, steps: int = 300,
+                 rays_per_batch: int = 4096, lr: float = 5e-3) -> Tuple[dict, list]:
+    """Photometric training; ``gt_renderer(c2w) -> (rgb [H,W,3], depth)``."""
+    params = model.init(key)
+    opt_cfg = AdamWConfig(grad_clip_norm=1.0)
+    opt = adamw_init(params)
+
+    # Pre-render GT for every training pose once.
+    gt = [gt_renderer(p)[0].reshape(-1, 3) for p in poses]
+    all_o, all_d = [], []
+    for p in poses:
+        o, d = rays.generate_rays(cam, p)
+        all_o.append(o)
+        all_d.append(d)
+    all_o = jnp.concatenate(all_o)
+    all_d = jnp.concatenate(all_d)
+    all_gt = jnp.concatenate(gt)
+
+    def loss_fn(p, o, d, target, k):
+        color, _ = model.render_rays(p, o, d, key=k)
+        return jnp.mean((color - target) ** 2)
+
+    @jax.jit
+    def step_fn(p, o_state, step, k):
+        ki, ks = jax.random.split(k)
+        idx = jax.random.randint(ki, (rays_per_batch,), 0, all_o.shape[0])
+        loss, grads = jax.value_and_grad(loss_fn)(
+            p, all_o[idx], all_d[idx], all_gt[idx], ks)
+        lr_t = cosine_warmup(step, lr, 20, steps)
+        p, o_state = adamw_update(grads, p, o_state, step, opt_cfg, lr_t)
+        return p, o_state, loss
+
+    losses = []
+    k = key
+    for s in range(steps):
+        k, sub = jax.random.split(k)
+        params, opt, loss = step_fn(params, opt, jnp.asarray(s), sub)
+        losses.append(float(loss))
+    return params, losses

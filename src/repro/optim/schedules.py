@@ -1,0 +1,13 @@
+"""LR schedules (pure functions of the step counter)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def cosine_warmup(step, base_lr: float, warmup_steps: int, total_steps: int,
+                  min_ratio: float = 0.1):
+    step = jnp.asarray(step, jnp.float32)
+    warm = base_lr * jnp.minimum(1.0, (step + 1.0) / max(warmup_steps, 1))
+    progress = jnp.clip((step - warmup_steps) / max(total_steps - warmup_steps, 1), 0.0, 1.0)
+    cos = min_ratio + (1.0 - min_ratio) * 0.5 * (1.0 + jnp.cos(jnp.pi * progress))
+    return jnp.where(step < warmup_steps, warm, base_lr * cos)

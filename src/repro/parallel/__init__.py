@@ -1,0 +1,3 @@
+from repro.parallel import compression, decode_attention, sharding
+
+__all__ = ["compression", "decode_attention", "sharding"]

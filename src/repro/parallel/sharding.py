@@ -1,0 +1,81 @@
+"""Sharding strategies on the fixed (pod, data, model) production mesh.
+
+``tp``       — Megatron TP over 'model'; params replicated across 'data'.
+               Right for ≲20B models (grad all-reduce over data is the only
+               DP cost; activations dominate).
+``tp+fsdp``  — TP over 'model' PLUS ZeRO-3-style sharding of every remaining
+               large dim over ('pod','data'). GSPMD inserts the per-layer
+               all-gathers / grad reduce-scatters automatically. Required for
+               the 400B-class archs (params alone exceed one chip ×16).
+
+Strategy application is a spec-tree transform so every entry point (dry-run,
+trainer, serving) shares it.
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+from jax.sharding import PartitionSpec as P
+
+PyTree = Any
+
+_FSDP_AXES = ("pod", "data")
+
+
+def _add_fsdp(spec: P, shape) -> P:
+    """Shard the largest still-unsharded, divisible dim over ('pod','data')."""
+    entries = list(spec) + [None] * (len(shape) - len(spec))
+    used = set()
+    for e in entries:
+        for a in (e if isinstance(e, (tuple, list)) else (e,)):
+            if a:
+                used.add(a)
+    if any(a in used for a in _FSDP_AXES):
+        return spec
+    # pick the largest unsharded dim (ties: later dim); require headroom so
+    # guard_spec keeps it under strict divisibility on the real mesh
+    best, best_size = None, 0
+    for i, (e, dim) in enumerate(zip(entries, shape)):
+        if e is None and dim > best_size and dim >= 256:
+            best, best_size = i, dim
+    if best is None:
+        return spec
+    entries[best] = _FSDP_AXES
+    return P(*entries)
+
+
+def _pure_fsdp(spec: P, shape) -> P:
+    """ZeRO-3: strip TP, shard the largest dim over (pod, data, model)."""
+    entries = [None] * len(shape)
+    best, best_size = None, 0
+    for i, dim in enumerate(shape):
+        if dim > best_size and dim >= 256:
+            best, best_size = i, dim
+    if best is not None:
+        entries[best] = ("pod", "data", "model")
+    return P(*entries)
+
+
+def apply_strategy(spec_tree: PyTree, shape_tree: PyTree, strategy: str
+                   ) -> PyTree:
+    if strategy == "tp":
+        return spec_tree
+    if strategy == "fsdp":
+        return jax.tree.map(
+            lambda s, sh: _pure_fsdp(s, sh.shape), spec_tree, shape_tree,
+            is_leaf=lambda x: isinstance(x, P))
+    if strategy != "tp+fsdp":
+        raise ValueError(strategy)
+    return jax.tree.map(
+        lambda s, sh: _add_fsdp(s, sh.shape), spec_tree, shape_tree,
+        is_leaf=lambda x: isinstance(x, P))
+
+
+def default_strategy(cfg) -> str:
+    """400B-class params cannot live on 16 chips — FSDP them."""
+    if cfg.sharding_strategy != "tp":
+        return cfg.sharding_strategy
+    # auto-upgrade when bf16 params exceed ~8 GiB/chip under pure TP
+    per_chip = cfg.param_count() * 2 / 16
+    return "tp+fsdp" if per_chip > 8 * 2**30 else "tp"

@@ -1,0 +1,232 @@
+"""Trip-count-corrected HLO cost walker.
+
+``compiled.cost_analysis()`` sums each computation ONCE — a ``lax.scan`` over
+72 layers reports one period of FLOPs (verified experimentally). This walker
+parses ``compiled.as_text()``, builds the computation call graph, multiplies
+``while`` bodies by their ``backend_config known_trip_count`` (falling back to
+the loop-condition constant), and returns trip-corrected totals:
+
+  flops      — 2·prod(result_dims)·prod(contracting_dims) per dot op
+  bytes      — Σ (result + operand bytes) of op lines in executed (non-fused)
+               computations — an HBM-traffic proxy (upper bound; CPU HLO fuses
+               less than TPU, noted in EXPERIMENTS.md)
+  collective — result bytes per all-gather/all-reduce/reduce-scatter/
+               all-to-all/collective-permute, ring-weighted (all-reduce ×2)
+
+This is the §Roofline data source; plain cost_analysis values are also
+recorded for reference.
+"""
+from __future__ import annotations
+
+import re
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Tuple
+
+_DTYPE_BYTES = {
+    "pred": 1, "s4": 1, "u4": 1, "s8": 1, "u8": 1, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4,
+    "s64": 8, "u64": 8, "f64": 8, "c64": 8, "c128": 16,
+}
+
+_SHAPE_RE = re.compile(r"\b([a-z][a-z0-9]*)\[([\d,]*)\]")
+_DEF_RE = re.compile(r"^\s*(?:ROOT\s+)?%([\w\.\-]+)\s*=\s*(.+?)\s([a-z][\w\-]*)\(")
+_COMP_HDR = re.compile(r"^(ENTRY\s+)?%?([\w\.\-]+)\s*\((.*)\)\s*->.*{\s*$")
+_TRIP_RE = re.compile(r'known_trip_count[^}]*?"?n"?[:=]"?(\d+)')
+_REF_RE = re.compile(r"(?:condition|body|to_apply|calls)=%?([\w\.\-]+)")
+_CALLS_SET_RE = re.compile(r"calls=\{([^}]*)\}")
+_OPERAND_RE = re.compile(r"%([\w\.\-]+)")
+_LCD_RE = re.compile(r"lhs_contracting_dims=\{([\d,]*)\}")
+
+_COLL_OPS = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+             "collective-permute")
+_COLL_FACTOR = {"all-gather": 1.0, "all-reduce": 2.0, "reduce-scatter": 1.0,
+                "all-to-all": 1.0, "collective-permute": 1.0}
+
+
+def _type_bytes(type_str: str) -> int:
+    total = 0
+    for dtype, dims in _SHAPE_RE.findall(type_str):
+        if dtype not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dtype]
+    return total
+
+
+def _dims(type_str: str) -> Optional[List[int]]:
+    m = _SHAPE_RE.search(type_str)
+    if not m:
+        return None
+    dims = m.group(2)
+    return [int(d) for d in dims.split(",")] if dims else []
+
+
+@dataclass
+class Comp:
+    name: str
+    is_entry: bool = False
+    flops: float = 0.0
+    bytes_: float = 0.0
+    coll: Dict[str, float] = field(default_factory=dict)
+    coll_counts: Dict[str, int] = field(default_factory=dict)
+    # (child_name, multiplier)
+    refs: List[Tuple[str, float]] = field(default_factory=list)
+    fused_internal: bool = False
+
+
+def _parse(text: str) -> Dict[str, Comp]:
+    comps: Dict[str, Comp] = {}
+    cur: Optional[Comp] = None
+    symbols: Dict[str, str] = {}
+    fused_children: set = set()
+
+    for raw in text.splitlines():
+        line = raw.rstrip()
+        hdr = _COMP_HDR.match(line)
+        if hdr:
+            cur = Comp(name=hdr.group(2), is_entry=bool(hdr.group(1)))
+            comps[cur.name] = cur
+            symbols = {}
+            # header params: "p: f32[2,3], q: (s32[], f32[4])"
+            for pname, ptype in re.findall(r"([\w\.\-]+):\s*([^,()]+(?:\([^)]*\))?)",
+                                           hdr.group(3)):
+                symbols[pname] = ptype
+            continue
+        if cur is None:
+            continue
+        if line.strip() == "}":
+            cur = None
+            continue
+
+        d = _DEF_RE.match(line)
+        result_type, op = (d.group(2), d.group(3)) if d else ("", "")
+        if d:
+            symbols[d.group(1)] = result_type
+
+        # --- references / trip counts
+        is_fusion = op == "fusion"
+        for ref in _REF_RE.findall(line):
+            mult = 1.0
+            if re.search(r"body=%?" + re.escape(ref) + r"\b", line):
+                t = _TRIP_RE.search(line)
+                mult = float(t.group(1)) if t else 1.0
+            cur.refs.append((ref, mult))
+            if is_fusion:
+                fused_children.add(ref)
+        mset = _CALLS_SET_RE.search(line)
+        if mset:
+            for ref in _OPERAND_RE.findall(mset.group(1)):
+                cur.refs.append((ref, 1.0))
+                if is_fusion:
+                    fused_children.add(ref)
+
+        if not d:
+            continue
+
+        # --- flops: dot ops
+        if op == "dot":
+            rd = _dims(result_type)
+            # first operand name -> its recorded type
+            args = line[line.index(op + "(") + len(op) + 1:]
+            ops_names = _OPERAND_RE.findall(args.split(")")[0])
+            lcd = _LCD_RE.search(line)
+            if rd is not None and ops_names and lcd is not None:
+                lhs_type = symbols.get(ops_names[0], "")
+                ld = _dims(lhs_type)
+                if ld is not None:
+                    k = 1
+                    for i in (int(x) for x in lcd.group(1).split(",") if x):
+                        if i < len(ld):
+                            k *= ld[i]
+                    n = 1
+                    for x in rd:
+                        n *= x
+                    cur.flops += 2.0 * n * k
+
+        # --- bytes: result + operands (executed-computation proxy)
+        b = _type_bytes(result_type)
+        arg_str = line[line.find("(") + 1:]
+        for name in _OPERAND_RE.findall(arg_str):
+            if name in symbols:
+                b += _type_bytes(symbols[name])
+        cur.bytes_ += b
+
+        # --- collectives (track f32 share: XLA:CPU upcasts bf16 dot-grads
+        # to f32 before reduction — a TPU build keeps them bf16, so the
+        # bf16-wire-corrected term halves the f32 share; see EXPERIMENTS.md)
+        for cop in _COLL_OPS:
+            if re.search(r"\b" + cop + r"(-start)?\(", line) and \
+                    "-done" not in line:
+                b = _type_bytes(result_type)
+                cur.coll[cop] = cur.coll.get(cop, 0.0) + b
+                cur.coll_counts[cop] = cur.coll_counts.get(cop, 0) + 1
+                if "f32[" in result_type:
+                    cur.coll_f32 = getattr(cur, "coll_f32", 0.0) + \
+                        b * _COLL_FACTOR[cop]
+                break
+
+    for name in fused_children:
+        if name in comps:
+            comps[name].fused_internal = True
+    return comps
+
+
+def analyze(text: str) -> Dict[str, object]:
+    comps = _parse(text)
+    memo_f: Dict[str, float] = {}
+    memo_b: Dict[str, float] = {}
+    memo_c: Dict[str, Dict[str, float]] = {}
+    memo_n: Dict[str, Dict[str, float]] = {}
+
+    memo_32: Dict[str, float] = {}
+
+    def walk(name: str) -> Tuple[float, float, Dict[str, float], Dict[str, float]]:
+        if name in memo_f:
+            return memo_f[name], memo_b[name], memo_c[name], memo_n[name]
+        c = comps.get(name)
+        if c is None:
+            return 0.0, 0.0, {}, {}
+        memo_f[name] = 0.0  # cycle guard
+        memo_b[name] = 0.0
+        memo_c[name] = {}
+        memo_n[name] = {}
+        memo_32[name] = 0.0
+        f = c.flops
+        b = 0.0 if c.fused_internal else c.bytes_
+        coll = dict(c.coll)
+        cnt = {k: float(v) for k, v in c.coll_counts.items()}
+        f32 = getattr(c, "coll_f32", 0.0)
+        for ref, mult in c.refs:
+            rf, rb, rc, rn = walk(ref)
+            f += mult * rf
+            b += mult * rb
+            f32 += mult * memo_32.get(ref, 0.0)
+            for k, v in rc.items():
+                coll[k] = coll.get(k, 0.0) + mult * v
+            for k, v in rn.items():
+                cnt[k] = cnt.get(k, 0.0) + mult * v
+        memo_f[name], memo_b[name], memo_c[name], memo_n[name] = f, b, coll, cnt
+        memo_32[name] = f32
+        return f, b, coll, cnt
+
+    entry = next((c.name for c in comps.values() if c.is_entry), None)
+    if entry is None:
+        return {"flops": 0.0, "bytes": 0.0, "coll_by_op": {}, "coll_counts": {},
+                "weighted_coll_bytes": 0.0}
+    f, b, coll, cnt = walk(entry)
+    weighted = sum(v * _COLL_FACTOR.get(k, 1.0) for k, v in coll.items())
+    f32_share = memo_32.get(entry, 0.0)
+    return {
+        "flops": f,
+        "bytes": b,
+        "coll_by_op": coll,
+        "coll_counts": cnt,
+        "weighted_coll_bytes": weighted,
+        "coll_f32_weighted": f32_share,
+        # TPU keeps bf16 dot-grads bf16; CPU lowering upcast them to f32
+        "weighted_coll_bytes_bf16wire": weighted - 0.5 * f32_share,
+    }

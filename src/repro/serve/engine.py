@@ -1,0 +1,118 @@
+"""Batched serving engine: continuous-batching prefill/decode with slot reuse.
+
+The SPARW analogy (DESIGN.md §5): a reference frame warped into many targets
+↔ prefix KV computed once and reused across every decode step (plus literal
+prefix-cache hits across requests). The engine reports ``reuse_ratio`` — the
+fraction of attention context served from cache rather than recomputed — the
+serving counterpart of the paper's warp ratio (Fig. 7).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.models import lm
+
+
+@dataclass
+class Request:
+    rid: int
+    prompt: np.ndarray  # [P] int32
+    max_new: int = 16
+    out: List[int] = field(default_factory=list)
+    done: bool = False
+
+
+class ServeEngine:
+    """Fixed-slot continuous batching (decode batch = num_slots)."""
+
+    def __init__(self, cfg: ModelConfig, params, num_slots: int = 4,
+                 max_len: int = 256):
+        self.cfg = cfg
+        self.params = params
+        self.num_slots = num_slots
+        self.max_len = max_len
+        self.prefill = jax.jit(lm.make_prefill_step(cfg, cache_len=max_len))
+        self.decode = jax.jit(lm.make_decode_step(cfg))
+        self.caches = lm.cache_init(cfg, num_slots, max_len)
+        self.slot_req: List[Optional[Request]] = [None] * num_slots
+        self.slot_pos = np.zeros(num_slots, np.int32)
+        # stats: SPARW-analogue reuse accounting
+        self.tokens_computed = 0  # fresh token positions run through the model
+        self.tokens_served_from_cache = 0  # context positions reused per step
+
+    # ------------------------------------------------------------------
+    def _assign(self, req: Request, slot: int) -> None:
+        prompt = req.prompt[None, :]
+        batch = {"tokens": jnp.asarray(prompt, jnp.int32)}
+        logits, caches = self.prefill(self.params, batch)
+        # write the single-row prefill cache into this slot
+        def put(c, n):
+            return c.at[:, slot:slot + 1].set(n[:, :1]) if c.ndim >= 2 else c
+        # caches trees: leading axis periods, second axis batch
+        self.caches = jax.tree.map(
+            lambda c, n: jax.lax.dynamic_update_slice_in_dim(
+                c, n.astype(c.dtype), slot, axis=1),
+            self.caches, _pad_cache(caches, self.max_len, self.cfg))
+        tok = int(jnp.argmax(logits[0]))
+        req.out.append(tok)
+        self.slot_req[slot] = req
+        self.slot_pos[slot] = len(req.prompt)
+        self.tokens_computed += len(req.prompt) + 1
+
+    def submit(self, requests: List[Request]) -> None:
+        self.queue = list(requests)
+
+    def step(self) -> bool:
+        """One engine tick: fill free slots (prefill), one decode step for
+        all active slots. Returns False when no work remains."""
+        for slot in range(self.num_slots):
+            if self.slot_req[slot] is None and self.queue:
+                self._assign(self.queue.pop(0), slot)
+        active = [s for s in range(self.num_slots) if self.slot_req[s]]
+        if not active:
+            return bool(self.queue)
+
+        tokens = np.zeros((self.num_slots, 1), np.int32)
+        for s in active:
+            tokens[s, 0] = self.slot_req[s].out[-1]
+        index = jnp.asarray(int(self.slot_pos[active].max()), jnp.int32)
+        logits, self.caches = self.decode(self.params, self.caches,
+                                          jnp.asarray(tokens), index)
+        nxt = np.asarray(jnp.argmax(logits, -1))
+        for s in active:
+            req = self.slot_req[s]
+            req.out.append(int(nxt[s]))
+            self.slot_pos[s] += 1
+            self.tokens_computed += 1
+            self.tokens_served_from_cache += int(self.slot_pos[s])
+            if len(req.out) >= req.max_new or self.slot_pos[s] >= self.max_len - 1:
+                req.done = True
+                self.slot_req[s] = None
+        return True
+
+    def run(self, requests: List[Request], max_ticks: int = 1000
+            ) -> Dict[str, float]:
+        self.submit(requests)
+        ticks = 0
+        while self.step() or any(self.slot_req):
+            ticks += 1
+            if ticks > max_ticks:
+                break
+        total_ctx = self.tokens_served_from_cache + self.tokens_computed
+        return {
+            "ticks": ticks,
+            "tokens_computed": self.tokens_computed,
+            "reuse_ratio": self.tokens_served_from_cache / max(total_ctx, 1),
+        }
+
+
+def _pad_cache(caches, max_len: int, cfg: ModelConfig):
+    """Pad a prefill cache (cache_len == max_len already) — identity hook
+    kept for clarity; prefill was built with cache_len=max_len."""
+    return caches

@@ -1,0 +1,177 @@
+"""Production trainer: checkpoint/restart, fault tolerance, straggler guard.
+
+Fault model (single-host container standing in for a multi-pod fleet):
+* ``fault_hook`` — tests/chaos inject exceptions at chosen steps; the trainer
+  restores the latest checkpoint and replays (the data pipeline is a pure
+  function of step, so replay is bit-deterministic).
+* straggler guard — steps slower than ``straggler_factor ×`` the running
+  median are counted and logged; on a real fleet this signal drives
+  re-dispatch/hot-spares, here it feeds the metrics log (hook point kept).
+* elastic — ``Trainer.restore`` re-lays checkpoints onto the *current* mesh
+  (see checkpoint.load), so restarts may change device count.
+"""
+from __future__ import annotations
+
+import json
+import time
+from dataclasses import dataclass, field
+from pathlib import Path
+from typing import Any, Callable, Dict, Optional
+
+import jax
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.data.pipeline import DataConfig, DataIterator
+from repro.models import lm
+from repro.models.common import guard_spec
+from repro.optim import AdamWConfig, adamw_init
+from repro.parallel.sharding import apply_strategy, default_strategy
+
+PyTree = Any
+
+
+@dataclass
+class TrainerConfig:
+    ckpt_dir: str = "runs/ckpt"
+    ckpt_every: int = 50
+    keep_ckpts: int = 3
+    log_every: int = 10
+    base_lr: float = 3e-4
+    warmup: int = 20
+    total_steps: int = 1000
+    straggler_factor: float = 3.0
+    grad_clip: float = 1.0
+    metrics_path: Optional[str] = None
+
+
+class Trainer:
+    def __init__(self, cfg: ModelConfig, data_cfg: DataConfig,
+                 tcfg: TrainerConfig, mesh=None,
+                 fault_hook: Optional[Callable[[int], None]] = None):
+        self.cfg = cfg
+        self.data_cfg = data_cfg
+        self.tcfg = tcfg
+        self.mesh = mesh
+        self.fault_hook = fault_hook
+        self.metrics: list[dict] = []
+        self.straggler_events = 0
+        self.restarts = 0
+
+        step_fn = lm.make_train_step(
+            cfg, AdamWConfig(grad_clip_norm=tcfg.grad_clip),
+            base_lr=tcfg.base_lr, warmup=tcfg.warmup,
+            total_steps=tcfg.total_steps)
+        if mesh is not None:
+            params_sh = jax.eval_shape(
+                lambda: lm.init_params(cfg, jax.random.key(0)))
+            strategy = default_strategy(cfg)
+            pspec = apply_strategy(lm.param_specs(cfg), params_sh, strategy)
+            from jax.sharding import NamedSharding
+
+            def ns(spec, sh):
+                return NamedSharding(mesh, guard_spec(spec, sh.shape, mesh,
+                                                      strict=True))
+
+            self._pshard = jax.tree.map(
+                ns, pspec, params_sh,
+                is_leaf=lambda x: hasattr(x, "__iter__") and not hasattr(x, "shape"))
+            self._oshard = {"m": self._pshard, "v": self._pshard}
+            self.step_fn = jax.jit(step_fn, donate_argnums=(0, 1))
+        else:
+            self._pshard = self._oshard = None
+            self.step_fn = jax.jit(step_fn, donate_argnums=(0, 1))
+
+    # ------------------------------------------------------------------
+    def init_state(self, seed: int = 0):
+        params = lm.init_params(self.cfg, jax.random.key(seed))
+        opt = adamw_init(params)
+        return params, opt
+
+    def restore(self, params_tmpl, opt_tmpl):
+        from repro.train import checkpoint as ckpt
+
+        step = ckpt.latest_step(self.tcfg.ckpt_dir)
+        if step is None:
+            return None
+        state, meta = ckpt.load(self.tcfg.ckpt_dir,
+                                {"params": params_tmpl, "opt": opt_tmpl},
+                                shardings=None)
+        return state["params"], state["opt"], meta["step"], meta.get(
+            "data_step", meta["step"])
+
+    # ------------------------------------------------------------------
+    def run(self, steps: int, resume: bool = True, seed: int = 0
+            ) -> Dict[str, Any]:
+        from repro.train import checkpoint as ckpt
+
+        params, opt = self.init_state(seed)
+        start = 0
+        data = DataIterator(self.data_cfg)
+        if resume:
+            restored = self.restore(params, opt)
+            if restored is not None:
+                params, opt, start, data_step = restored
+                data.restore(data_step)
+                self.restarts += 0  # resumed cleanly, not a fault restart
+
+        step = start
+        durations: list[float] = []
+        losses = []
+        while step < start + steps:
+            batch = next(data)
+            batch = {k: jax.numpy.asarray(v) for k, v in batch.items()}
+            t0 = time.time()
+            try:
+                if self.fault_hook is not None:
+                    self.fault_hook(step)
+                params, opt, metrics = self.step_fn(
+                    params, opt, batch, jax.numpy.asarray(step))
+                loss = float(metrics["loss"])
+            except Exception as e:  # fault-tolerance path
+                self.restarts += 1
+                last = ckpt.latest_step(self.tcfg.ckpt_dir)
+                if last is None:
+                    params, opt = self.init_state(seed)
+                    step = 0
+                    data.restore(0)
+                else:
+                    state, meta = ckpt.load(
+                        self.tcfg.ckpt_dir, {"params": params, "opt": opt})
+                    params, opt = state["params"], state["opt"]
+                    step = meta["step"]
+                    data.restore(meta.get("data_step", step))
+                self._log({"event": "restart", "step": step,
+                           "error": repr(e)[:200]})
+                continue
+
+            dt = time.time() - t0
+            durations.append(dt)
+            med = float(np.median(durations[-50:]))
+            if len(durations) > 5 and dt > self.tcfg.straggler_factor * med:
+                self.straggler_events += 1
+                self._log({"event": "straggler", "step": step, "dt": dt,
+                           "median": med})
+            losses.append(loss)
+            if step % self.tcfg.log_every == 0:
+                self._log({"step": step, "loss": loss, "dt": dt})
+            step += 1
+            if step % self.tcfg.ckpt_every == 0:
+                ckpt.save(self.tcfg.ckpt_dir, step,
+                          {"params": params, "opt": opt},
+                          meta={"data_step": data.state(),
+                                "arch": self.cfg.name},
+                          keep=self.tcfg.keep_ckpts)
+        ckpt.save(self.tcfg.ckpt_dir, step,
+                  {"params": params, "opt": opt},
+                  meta={"data_step": data.state(), "arch": self.cfg.name},
+                  keep=self.tcfg.keep_ckpts)
+        return {"params": params, "opt": opt, "losses": losses,
+                "final_step": step, "restarts": self.restarts,
+                "straggler_events": self.straggler_events}
+
+    def _log(self, rec: dict) -> None:
+        self.metrics.append(rec)
+        if self.tcfg.metrics_path:
+            with open(self.tcfg.metrics_path, "a") as f:
+                f.write(json.dumps(rec) + "\n")

@@ -1,0 +1,37 @@
+import os
+
+# tests run on the default single CPU device; dry-run cells (512 fake
+# devices) are exercised via subprocesses in test_distribution.py
+os.environ.setdefault("JAX_PLATFORMS", "cpu")
+
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.nerf import models, rays, scenes
+
+
+@pytest.fixture(scope="session")
+def scene():
+    return scenes.make_scene("lego")
+
+
+@pytest.fixture(scope="session")
+def baked_model(scene):
+    model, cfg = models.make_model("dvgo", grid_res=48, channels=4,
+                                   decoder="direct", num_samples=32)
+    params = model.init_baked(scene)
+    return model, params
+
+
+@pytest.fixture(scope="session")
+def small_cam():
+    return rays.Camera.square(48)
+
+
+@pytest.fixture(scope="session")
+def ref_frame(baked_model, small_cam):
+    model, params = baked_model
+    pose = rays.orbit_pose(jnp.asarray(0.3))
+    rgb, dep = model.render_image(params, small_cam, pose)
+    return rgb, dep, pose

@@ -1,0 +1,51 @@
+"""Bank-conflict model (§IV-B): feature-major conflicts, channel-major zero."""
+import numpy as np
+import pytest
+
+from repro.core import layout
+
+
+@pytest.fixture(scope="module")
+def vertex_ids():
+    rng = np.random.default_rng(0)
+    return rng.integers(0, 48**3, size=(4096, 8))
+
+
+def test_feature_major_has_conflicts(vertex_ids):
+    stats = layout.bank_conflict_stats(vertex_ids, layout.SramCfg())
+    assert stats["conflict_rate"] > 0.2  # paper Fig. 6: avg 52%
+    assert stats["slowdown"] > 1.0
+
+
+def test_channel_major_is_conflict_free(vertex_ids):
+    stats = layout.channel_major_stats(vertex_ids, layout.SramCfg())
+    assert stats["conflict_rate"] == 0.0
+    assert stats["slowdown"] == 1.0
+
+
+def test_more_banks_fewer_conflicts(vertex_ids):
+    c16 = layout.bank_conflict_stats(vertex_ids, layout.SramCfg(num_banks=16))
+    c64 = layout.bank_conflict_stats(vertex_ids, layout.SramCfg(num_banks=64))
+    assert c64["conflict_rate"] < c16["conflict_rate"]
+
+
+def test_more_concurrent_rays_more_conflicts(vertex_ids):
+    """Paper §II-D: Instant-NGP conflicts rise 52%→80% at 64 rays."""
+    r16 = layout.bank_conflict_stats(
+        vertex_ids, layout.SramCfg(concurrent_rays=16))
+    r64 = layout.bank_conflict_stats(
+        vertex_ids, layout.SramCfg(concurrent_rays=64))
+    assert r64["conflict_rate"] > r16["conflict_rate"]
+
+
+def test_ports_reduce_stalls(vertex_ids):
+    p1 = layout.bank_conflict_stats(vertex_ids, layout.SramCfg(ports_per_bank=1))
+    p2 = layout.bank_conflict_stats(vertex_ids, layout.SramCfg(ports_per_bank=2))
+    assert p2["stall_cycles"] < p1["stall_cycles"]
+
+
+def test_channel_major_view_roundtrip():
+    t = np.arange(24, dtype=np.float32).reshape(6, 4)
+    v = layout.channel_major_view(t)
+    assert v.shape == (4, 6)
+    np.testing.assert_array_equal(v.T, t)

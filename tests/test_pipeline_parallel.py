@@ -1,0 +1,37 @@
+"""gpipe over the pod axis == sequential oracle (multi-device subprocess)."""
+import os
+import subprocess
+import sys
+import textwrap
+
+
+def test_pipelined_forward_matches_reference():
+    code = """
+        import os
+        os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
+        import jax, jax.numpy as jnp, numpy as np
+        from jax.sharding import Mesh
+        from repro.parallel.pipeline import (pipelined_forward,
+                                             reference_forward)
+        mesh = Mesh(np.asarray(jax.devices()).reshape(4,), ("pod",))
+        L, D, B = 8, 16, 8
+        params = {"w": 0.3 * jax.random.normal(jax.random.key(0), (L, D, D)),
+                  "b": 0.01 * jax.random.normal(jax.random.key(1), (L, D))}
+        def layer(p, h):
+            return jnp.tanh(h @ p["w"] + p["b"])
+        x = jax.random.normal(jax.random.key(2), (B, D))
+        want = reference_forward(layer, params, x)
+        for m in (2, 4, 8):
+            got = pipelined_forward(layer, params, x, mesh=mesh,
+                                    num_microbatches=m)
+            err = float(jnp.abs(got - want).max())
+            assert err < 1e-5, (m, err)
+        print("PP_OK")
+    """
+    env = dict(os.environ, PYTHONPATH="src")
+    r = subprocess.run([sys.executable, "-c", textwrap.dedent(code)],
+                       capture_output=True, text=True, env=env,
+                       cwd=os.path.dirname(os.path.dirname(
+                           os.path.abspath(__file__))))
+    assert r.returncode == 0, r.stderr[-2000:]
+    assert "PP_OK" in r.stdout

@@ -1,0 +1,143 @@
+"""Hypothesis property tests on system invariants."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import sparw, streaming
+from repro.nerf import grids, rays, volrend
+from repro.parallel import compression
+
+_settings = dict(max_examples=15, deadline=None)
+
+
+@settings(**_settings)
+@given(seed=st.integers(0, 2**16), n=st.integers(2, 6),
+       samples=st.integers(4, 32))
+def test_volrend_invariants(seed, n, samples):
+    """Compositing weights: non-negative, sum ≤ 1; depth within [near, far];
+    opaque first sample ⇒ its color dominates."""
+    key = jax.random.key(seed)
+    k1, k2, k3 = jax.random.split(key, 3)
+    sig = jax.nn.relu(jax.random.normal(k1, (n, samples)) * 5)
+    rgb = jax.nn.sigmoid(jax.random.normal(k2, (n, samples, 3)))
+    t = jnp.sort(jax.random.uniform(k3, (n, samples), minval=0.5, maxval=6.0),
+                 axis=-1)
+    color, depth, w = volrend.composite(sig, rgb, t, far=6.0,
+                                        white_bkgd=False)
+    assert float(w.min()) >= 0.0
+    assert float(w.sum(-1).max()) <= 1.0 + 1e-5
+    assert float(depth.min()) >= float(t.min()) - 1e-4
+    assert float(depth.max()) <= 6.0 + 1e-4
+    assert np.isfinite(np.asarray(color)).all()
+
+
+@settings(**_settings)
+@given(seed=st.integers(0, 2**16))
+def test_opaque_surface_returns_surface_color(seed):
+    key = jax.random.key(seed)
+    rgb = jax.nn.sigmoid(jax.random.normal(key, (1, 16, 3)))
+    sig = jnp.zeros((1, 16)).at[0, 5].set(1e5)
+    t = jnp.linspace(1.0, 4.0, 16)[None]
+    color, depth, _ = volrend.composite(sig, rgb, t, far=6.0,
+                                        white_bkgd=False)
+    np.testing.assert_allclose(np.asarray(color[0]), np.asarray(rgb[0, 5]),
+                               atol=1e-3)
+    assert abs(float(depth[0]) - float(t[0, 5])) < 0.3
+
+
+@settings(**_settings)
+@given(seed=st.integers(0, 2**16), n=st.integers(1, 500))
+def test_trilerp_weights_sum_to_one(seed, n):
+    pts = jax.random.uniform(jax.random.key(seed), (n, 3), minval=-1,
+                             maxval=1)
+    _, w = grids.corner_ids_weights(pts, 32)
+    np.testing.assert_allclose(np.asarray(w.sum(-1)), 1.0, atol=1e-5)
+    assert float(w.min()) >= 0.0
+
+
+@settings(**_settings)
+@given(seed=st.integers(0, 2**16))
+def test_trilerp_exact_at_vertices(seed):
+    """Querying exactly at a grid vertex returns that vertex's feature."""
+    res = 16
+    table = jax.random.normal(jax.random.key(seed), (res**3, 4))
+    ij = jax.random.randint(jax.random.key(seed + 1), (20, 3), 0, res)
+    pts = ij / (res - 1) * 2.0 - 1.0
+    ids, w = grids.corner_ids_weights(pts, res)
+    out = grids.gather_trilerp_ref(table, ids, w)
+    vid = (ij[:, 0] * res + ij[:, 1]) * res + ij[:, 2]
+    # boundary vertices clip grid coords by 1e-4 -> O(1e-3) interp error
+    np.testing.assert_allclose(np.asarray(out), np.asarray(table[vid]),
+                               atol=5e-3)
+
+
+@settings(**_settings)
+@given(seed=st.integers(0, 2**16), n=st.integers(10, 2000))
+def test_streaming_is_permutation_invariant(seed, n):
+    cfg = streaming.StreamingCfg(grid_res=32, mvoxel_edge=8, capacity=4096)
+    table = jax.random.normal(jax.random.key(1), (32**3, 4))
+    pts = jax.random.uniform(jax.random.key(seed), (n, 3), minval=-1,
+                             maxval=1)
+    a, _ = streaming.streaming_gather(table, pts, cfg)
+    perm = jax.random.permutation(jax.random.key(seed + 1), n)
+    b, _ = streaming.streaming_gather(table, pts[perm], cfg)
+    np.testing.assert_array_equal(np.asarray(a)[np.asarray(perm)],
+                                  np.asarray(b))
+
+
+@settings(**_settings)
+@given(seed=st.integers(0, 2**16), depth=st.floats(1.0, 5.0))
+def test_warp_roundtrip_recovers_depth(seed, depth):
+    """ref→world→target with identical poses reproduces point depth."""
+    cam = rays.Camera.square(16)
+    d = jnp.full((16, 16), depth)
+    pts = sparw.frame_to_pointcloud(d, cam)
+    pose = rays.orbit_pose(jnp.asarray(float(seed % 7) / 7.0))
+    out = sparw.transform_points(pts, pose, pose)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(pts), atol=1e-4)
+
+
+@settings(**_settings)
+@given(seed=st.integers(0, 2**16))
+def test_rope_preserves_norm(seed):
+    from repro.models.attention import rope
+
+    x = jax.random.normal(jax.random.key(seed), (2, 8, 4, 16))
+    pos = jnp.broadcast_to(jnp.arange(8)[None], (2, 8))
+    y = rope(x, pos, theta=10000.0)
+    np.testing.assert_allclose(np.asarray(jnp.linalg.norm(y, axis=-1)),
+                               np.asarray(jnp.linalg.norm(x, axis=-1)),
+                               rtol=1e-4)
+
+
+@settings(**_settings)
+@given(seed=st.integers(0, 2**16), mode=st.sampled_from(["bfloat16", "int8"]))
+def test_compression_error_feedback_bounded(seed, mode):
+    """Error-feedback residual stays bounded by one quantization step."""
+    g = {"w": jax.random.normal(jax.random.key(seed), (64, 8))}
+    ef = compression.make_ef_state(g)
+    for _ in range(3):
+        q, s, ef = compression.compress_with_feedback(g, ef, mode)
+    deq = compression.dequantize(q["w"], s["w"])
+    # one-step reconstruction error is residual-sized, not accumulating
+    step = (float(s["w"]) if mode == "int8" else
+            float(jnp.abs(g["w"]).max()) * 2**-7)
+    assert float(jnp.abs(ef["w"]).max()) <= max(4 * step, 1e-3)
+
+
+@settings(**_settings)
+@given(seed=st.integers(0, 2**16))
+def test_checkpoint_roundtrip(seed, tmp_path_factory):
+    from repro.train import checkpoint as ckpt
+
+    d = tmp_path_factory.mktemp(f"ck{seed % 100}")
+    state = {"a": jax.random.normal(jax.random.key(seed), (4, 3)),
+             "b": {"c": jnp.arange(7)}}
+    ckpt.save(d, 5, state, meta={"data_step": 5})
+    out, meta = ckpt.load(d, state)
+    assert meta["step"] == 5
+    np.testing.assert_array_equal(np.asarray(out["a"]),
+                                  np.asarray(state["a"]))
+    np.testing.assert_array_equal(np.asarray(out["b"]["c"]),
+                                  np.asarray(state["b"]["c"]))

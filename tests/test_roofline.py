@@ -1,0 +1,83 @@
+"""The trip-corrected HLO cost walker — the §Roofline data source — must
+reproduce hand-computed FLOPs/collectives exactly (scan bodies × trips)."""
+import os
+import subprocess
+import sys
+import textwrap
+
+from repro.roofline import analysis, hlo_cost
+
+
+def test_walker_exact_on_scanned_matmul_subprocess():
+    code = """
+        import os
+        os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+        import jax, jax.numpy as jnp, numpy as np
+        from jax.sharding import PartitionSpec as P, NamedSharding, Mesh
+        from repro.roofline import hlo_cost
+        mesh = Mesh(np.asarray(jax.devices()).reshape(2, 4), ("data", "model"))
+        TRIPS = 5
+        def f(x, ws):
+            def body(c, w):
+                h = jnp.tanh(c @ w)
+                h = jax.lax.with_sharding_constraint(
+                    h, NamedSharding(mesh, P("data", "model")))
+                return h @ w.T, None
+            c, _ = jax.lax.scan(body, x, ws)
+            return c.sum()
+        x = jax.ShapeDtypeStruct((128, 256), jnp.float32)
+        ws = jax.ShapeDtypeStruct((TRIPS, 256, 256), jnp.float32)
+        cc = jax.jit(f, in_shardings=(
+            NamedSharding(mesh, P("data", None)),
+            NamedSharding(mesh, P(None, None, "model")))).lower(x, ws).compile()
+        res = hlo_cost.analyze(cc.as_text())
+        # per-device: 2 matmuls/trip of [64,256]x[256,64] = 2*2*64*64*256
+        expect_flops = TRIPS * (2 * 2 * 64 * 64 * 256)
+        assert res["flops"] == expect_flops, (res["flops"], expect_flops)
+        # all-reduce [64,256] f32 per trip, ring factor 2, + scalar + f32 share
+        expect_coll = TRIPS * 65536 * 2 + 4 * 2
+        assert abs(res["weighted_coll_bytes"] - expect_coll) <= 16, res
+        assert res["weighted_coll_bytes_bf16wire"] <= res["weighted_coll_bytes"]
+        # XLA's own count misses the trip multiplier (the bug we correct)
+        assert cc.cost_analysis()["flops"] < expect_flops
+        print("WALKER_OK")
+    """
+    env = dict(os.environ, PYTHONPATH="src")
+    r = subprocess.run([sys.executable, "-c", textwrap.dedent(code)],
+                       capture_output=True, text=True, env=env,
+                       cwd=os.path.dirname(os.path.dirname(
+                           os.path.abspath(__file__))))
+    assert r.returncode == 0, r.stderr[-2000:]
+    assert "WALKER_OK" in r.stdout
+
+
+def test_collective_factors_and_dtypes():
+    txt = """
+ENTRY %main (p: bf16[128,64]) -> bf16[128,64] {
+  %p = bf16[128,64]{1,0} parameter(0)
+  %ag = bf16[128,64]{1,0} all-gather(%p), dimensions={0}
+  %ar = f32[128,64]{1,0} all-reduce(%p), to_apply=%add
+  ROOT %out = bf16[128,64]{1,0} copy(%ag)
+}
+"""
+    res = hlo_cost.analyze(txt)
+    assert res["coll_by_op"]["all-gather"] == 128 * 64 * 2
+    assert res["coll_by_op"]["all-reduce"] == 128 * 64 * 4
+    # ring weighting: AR x2; f32 share halved in the bf16-wire term
+    assert res["weighted_coll_bytes"] == 128 * 64 * 2 + 2 * 128 * 64 * 4
+    assert res["weighted_coll_bytes_bf16wire"] == (
+        res["weighted_coll_bytes"] - 128 * 64 * 4)
+
+
+def test_roofline_report_terms():
+    r = analysis.RooflineReport(
+        arch="a", shape="s", mesh="single", num_devices=256,
+        flops=197e12, bytes_accessed=819e9, coll_weighted_bytes=50e9,
+        coll_by_op={}, coll_counts={}, hbm_bytes=819e9 / 2,
+        model_flops_global=197e12 * 256 * 0.5)
+    assert abs(r.compute_s - 1.0) < 1e-9
+    assert abs(r.memory_s - 0.5) < 1e-9  # analytic model takes precedence
+    assert abs(r.collective_s - 1.0) < 1e-9
+    assert r.dominant in ("compute", "collective")
+    assert abs(r.mfu - 0.5) < 1e-9
+    assert abs(r.useful_flops_fraction - 0.5) < 1e-9

@@ -1,0 +1,57 @@
+"""Serving engine: batched prefill/decode correctness + reuse accounting."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.models import lm
+from repro.serve.engine import Request, ServeEngine
+
+CFG = ModelConfig(name="tiny", family="dense", num_layers=2, d_model=64,
+                  num_heads=4, num_kv_heads=2, d_ff=128, vocab_size=64,
+                  dtype="float32")
+
+
+def _direct_generate(params, prompt, n_new):
+    """Reference: single-request greedy generation."""
+    toks = list(prompt)
+    out = []
+    max_len = len(prompt) + n_new + 2
+    logits, caches = lm.make_prefill_step(CFG, cache_len=max_len)(
+        params, {"tokens": jnp.asarray([toks], jnp.int32)})
+    decode = lm.make_decode_step(CFG)
+    pos = len(toks)
+    tok = int(jnp.argmax(logits[0]))
+    out.append(tok)
+    for _ in range(n_new - 1):
+        logits, caches = decode(params, caches,
+                                jnp.asarray([[tok]], jnp.int32),
+                                jnp.asarray(pos, jnp.int32))
+        tok = int(jnp.argmax(logits[0]))
+        out.append(tok)
+        pos += 1
+    return out
+
+
+def test_engine_matches_direct_decode():
+    params = lm.init_params(CFG, jax.random.key(0))
+    rng = np.random.default_rng(0)
+    prompts = [rng.integers(0, 64, size=8).astype(np.int32) for _ in range(2)]
+    want = [_direct_generate(params, p, 6) for p in prompts]
+
+    eng = ServeEngine(CFG, params, num_slots=2, max_len=32)
+    reqs = [Request(rid=i, prompt=p, max_new=6) for i, p in enumerate(prompts)]
+    stats = eng.run(reqs)
+    for r, w in zip(reqs, want):
+        assert r.out[:6] == w[:6], (r.out, w)
+    assert stats["reuse_ratio"] > 0.5  # SPARW-analogue: most context reused
+
+
+def test_engine_more_requests_than_slots():
+    params = lm.init_params(CFG, jax.random.key(0))
+    rng = np.random.default_rng(1)
+    reqs = [Request(rid=i, prompt=rng.integers(0, 64, size=6).astype(np.int32),
+                    max_new=4) for i in range(5)]
+    eng = ServeEngine(CFG, params, num_slots=2, max_len=24)
+    eng.run(reqs)
+    assert all(len(r.out) >= 4 for r in reqs)

@@ -1,0 +1,116 @@
+"""SPARW correctness: Eq. 1–4, the z-buffer, disocclusion and scheduling."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import schedule, sparw
+from repro.nerf import rays
+from repro.utils import psnr
+
+
+def test_warp_identity_is_exact(ref_frame, small_cam):
+    rgb, dep, pose = ref_frame
+    w = sparw.warp_frame(rgb, dep, pose, pose, small_cam)
+    assert float(w.holes.mean()) == 0.0
+    np.testing.assert_allclose(np.asarray(w.rgb), np.asarray(rgb), atol=1e-6)
+    np.testing.assert_allclose(np.asarray(w.depth), np.asarray(dep), rtol=1e-4)
+
+
+def test_pointcloud_roundtrip(small_cam):
+    """project(frame_to_pointcloud(depth)) must reproduce pixel centers."""
+    h, w = small_cam.height, small_cam.width
+    depth = jnp.full((h, w), 2.5)
+    pts = sparw.frame_to_pointcloud(depth, small_cam)
+    u, v, z = sparw.project(pts, small_cam)
+    vv, uu = jnp.meshgrid(jnp.arange(h, dtype=jnp.float32),
+                          jnp.arange(w, dtype=jnp.float32), indexing="ij")
+    np.testing.assert_allclose(np.asarray(u), np.asarray(uu).ravel(), atol=1e-3)
+    np.testing.assert_allclose(np.asarray(v), np.asarray(vv).ravel(), atol=1e-3)
+    np.testing.assert_allclose(np.asarray(z), 2.5, rtol=1e-6)
+
+
+def test_transform_is_rigid(ref_frame, small_cam):
+    rgb, dep, pose = ref_frame
+    pts = sparw.frame_to_pointcloud(dep, small_cam)
+    tgt = rays.orbit_pose(jnp.asarray(0.5))
+    out = sparw.transform_points(pts, pose, tgt)
+    # rigid transform preserves pairwise distances
+    i = jnp.asarray([0, 50, 500, 900])
+    j = jnp.asarray([10, 77, 1200, 1500])
+    d0 = jnp.linalg.norm(pts[i] - pts[j], axis=-1)
+    d1 = jnp.linalg.norm(out[i] - out[j], axis=-1)
+    np.testing.assert_allclose(np.asarray(d0), np.asarray(d1), rtol=1e-4)
+
+
+def test_small_motion_quality_and_holes(ref_frame, small_cam, baked_model):
+    """Paper Fig. 7: adjacent-frame warping covers ≳95% of pixels and the
+    warped pixels approximate a fresh render."""
+    model, params = baked_model
+    rgb, dep, pose = ref_frame
+    tgt_pose = rays.orbit_pose(jnp.asarray(0.3 + jnp.deg2rad(1.5)))
+    w = sparw.warp_frame(rgb, dep, pose, tgt_pose, small_cam)
+    assert float(w.holes.mean()) < 0.06
+    fresh, _ = model.render_image(params, small_cam, tgt_pose)
+    masked = jnp.where(w.holes[..., None], fresh, w.rgb)
+    assert float(psnr(masked, fresh)) > 28.0
+
+
+def test_warp_angle_threshold_masks_more(ref_frame, small_cam):
+    rgb, dep, pose = ref_frame
+    tgt = rays.orbit_pose(jnp.asarray(0.3 + jnp.deg2rad(6.0)))
+    loose = sparw.warp_frame(rgb, dep, pose, tgt, small_cam, phi_deg=None)
+    tight = sparw.warp_frame(rgb, dep, pose, tgt, small_cam, phi_deg=1.0)
+    assert float(tight.holes.mean()) > float(loose.holes.mean())
+    # phi large enough never masks more than the geometric holes
+    loose2 = sparw.warp_frame(rgb, dep, pose, tgt, small_cam, phi_deg=180.0)
+    assert float(loose2.holes.mean()) == pytest.approx(
+        float(loose.holes.mean()), abs=1e-6)
+
+
+def test_combine_fills_holes(ref_frame, small_cam):
+    rgb, dep, pose = ref_frame
+    tgt = rays.orbit_pose(jnp.asarray(0.35))
+    w = sparw.warp_frame(rgb, dep, pose, tgt, small_cam)
+    fill = jnp.ones_like(w.rgb) * 0.5
+    out = sparw.combine(w, fill, w.holes)
+    holes3 = np.asarray(w.holes)
+    out_np = np.asarray(out)
+    assert np.all(out_np[holes3] == 0.5)
+    assert np.all(out_np[~holes3] == np.asarray(w.rgb)[~holes3])
+
+
+# ---------------------------------------------------------------------------
+# scheduling (Eq. 5–6, Fig. 10/11)
+# ---------------------------------------------------------------------------
+
+
+def test_pose_extrapolation_linear():
+    p0 = rays.look_at(jnp.array([1.0, 0.0, 0.0]), jnp.zeros(3))
+    p1 = rays.look_at(jnp.array([1.1, 0.0, 0.0]), jnp.zeros(3))
+    p2 = schedule.extrapolate_pose(p0, p1, steps_ahead=2.0)
+    np.testing.assert_allclose(np.asarray(p2[:3, 3]),
+                               np.array([1.3, 0.0, 0.0]), atol=1e-5)
+
+
+def test_so3_log_exp_roundtrip():
+    key = jax.random.key(0)
+    w = 0.7 * jax.random.normal(key, (3,))
+    r = schedule.so3_exp(w)
+    w2 = schedule.so3_log(r)
+    np.testing.assert_allclose(np.asarray(w), np.asarray(w2), atol=1e-5)
+
+
+def test_schedule_offtraj_windows():
+    poses = [rays.orbit_pose(jnp.asarray(0.01 * i)) for i in range(10)]
+    plan = schedule.WarpSchedule(window=4, mode="offtraj").plan(poses)
+    assert len(plan) == 10
+    assert plan[0]["window_start"] == 0 and plan[5]["window_start"] == 4
+    # off-trajectory references are *new* poses, not trajectory frames
+    assert plan[5]["ref_frame_idx"] is None
+
+
+def test_schedule_temporal_serializes():
+    poses = [rays.orbit_pose(jnp.asarray(0.01 * i)) for i in range(8)]
+    plan = schedule.WarpSchedule(window=4, mode="temporal").plan(poses)
+    assert plan[4]["ref_frame_idx"] == 3  # previous rendered frame
