@@ -1,29 +1,168 @@
-"""Benchmark harness: one function per paper table/figure.
+"""Benchmark harness.
 
-Prints ``name,us_per_call,derived`` CSV (plus the roofline rows when dry-run
-artifacts exist). ``--only fig16`` runs a single figure.
+Default mode is the **render benchmark** — a real frames/sec harness for the
+SPARW trajectory path: it times the seed host-loop renderer against the
+device-resident engine on the same trajectory, checks per-frame parity, and
+writes ``BENCH_render.json`` (wall-clock per frame, fps, MLP-work fraction,
+hole fraction, speedup) so subsequent PRs have a perf baseline to beat.
+
+  PYTHONPATH=src python benchmarks/run.py             # full render bench
+  PYTHONPATH=src python benchmarks/run.py --smoke     # tiny <60 s variant,
+                                                      # both NeRF backends
+  PYTHONPATH=src python benchmarks/run.py --figures   # legacy per-figure
+                                                      # tables (CSV)
+
+``--only fig16`` filters the legacy figure functions.
 """
 from __future__ import annotations
 
 import argparse
+import json
 import sys
 import time
 import traceback
+from pathlib import Path
+
+ROOT = Path(__file__).resolve().parents[1]
+if str(ROOT) not in sys.path:  # allow `python benchmarks/run.py` as well as -m
+    sys.path.insert(0, str(ROOT))
 
 
-def main() -> None:
-    ap = argparse.ArgumentParser()
-    ap.add_argument("--only", default=None,
-                    help="substring filter on figure function names")
-    args = ap.parse_args()
+# ---------------------------------------------------------------------------
+# render benchmark (frames/sec, device engine vs seed host loop)
+# ---------------------------------------------------------------------------
 
+
+def _build_renderer(res: int, window: int, engine: str, *,
+                    backend: str = "reference", grid_res: int = 48,
+                    num_samples: int = 32, hole_cap=None):
+    from repro.core import pipeline
+    from repro.nerf import models, rays, scenes
+
+    scene = scenes.make_scene("lego")
+    model, _ = models.make_model("dvgo", grid_res=grid_res, channels=4,
+                                 decoder="direct", num_samples=num_samples,
+                                 backend=backend,
+                                 stream_capacity=512)
+    params = model.init_baked(scene)
+    cam = rays.Camera.square(res)
+    return pipeline.CiceroRenderer(model, params, cam, window=window,
+                                   engine=engine, hole_cap=hole_cap)
+
+
+def _time_trajectory(renderer, traj):
+    import jax
+
+    t0 = time.time()
+    frames, stats = renderer.render_trajectory(traj)
+    jax.block_until_ready(frames)
+    return time.time() - t0, frames, stats
+
+
+def _run_variant(renderer, traj, reps: int = 3):
+    """Cold pass (includes compiles — the real end-to-end cost of a fresh
+    renderer) + warm pass (steady-state execution)."""
+    cold_s, frames, stats = _time_trajectory(renderer, traj)
+    warm_s = min(_time_trajectory(renderer, traj)[0] for _ in range(reps))
+    n = len(traj)
+    return {
+        "wall_s_cold": cold_s,
+        "wall_s_warm": warm_s,
+        "s_per_frame_cold": cold_s / n,
+        "s_per_frame_warm": warm_s / n,
+        "fps_warm": n / warm_s,
+        "hole_fraction": stats.mean_hole_fraction,
+        "mlp_work_fraction": stats.mlp_work_fraction,
+        "reference_renders": stats.reference_renders,
+    }, frames
+
+
+def bench_render(frames: int = 32, res: int = 64, window: int = 4,
+                 smoke: bool = False, out: Path | None = None) -> dict:
+    """Device-resident engine vs the seed host loop on one trajectory.
+
+    Returns (and writes to ``out``, default ``BENCH_render.json``) the
+    measured wall-clocks, the speedup, and the per-frame parity PSNR.
+    ``speedup`` (the headline) is end-to-end wall clock for a fresh renderer:
+    the seed host loop recompiles for every distinct hole count, which is its
+    real per-trajectory cost; ``speedup_warm`` isolates steady-state
+    execution (same-trajectory reruns with every compile already cached).
+    """
+    import numpy as np
+
+    from repro.core import pipeline
+    from repro.utils import psnr
+
+    if smoke:
+        frames, res, window = 8, 32, 4
+    grid_res = 32 if smoke else 48
+    num_samples = 16 if smoke else 32
+    traj = pipeline.orbit_trajectory(frames, step_deg=1.0)
+    hw = res * res
+    # cap sized to the paper's hole regime (2-6%) with margin; the engine
+    # falls back to dense renders if a window ever exceeds it
+    hole_cap = max(hw // 8, 128)
+
+    host = _build_renderer(res, window, "host", grid_res=grid_res,
+                           num_samples=num_samples)
+    host_m, host_frames = _run_variant(host, traj)
+
+    dev = _build_renderer(res, window, "device", grid_res=grid_res,
+                          num_samples=num_samples, hole_cap=hole_cap)
+    dev_m, dev_frames = _run_variant(dev, traj)
+
+    pair_psnr = [float(psnr(a, b)) for a, b in zip(host_frames, dev_frames)]
+    # quality vs the full-NeRF baseline: the device engine must track the
+    # seed renderer to within 0.1 dB per frame
+    base = host.render_baseline(traj)
+    d_host = [float(psnr(f, b)) for f, b in zip(host_frames, base)]
+    d_dev = [float(psnr(f, b)) for f, b in zip(dev_frames, base)]
+    psnr_delta = float(np.max(np.abs(np.asarray(d_host) - np.asarray(d_dev))))
+
+    result = {
+        "config": {"frames": frames, "res": res, "window": window,
+                   "grid_res": grid_res, "num_samples": num_samples,
+                   "hole_cap": hole_cap, "smoke": smoke},
+        "host_loop": host_m,
+        "device_engine": dev_m,
+        "speedup": host_m["wall_s_cold"] / dev_m["wall_s_cold"],
+        "speedup_warm": host_m["wall_s_warm"] / dev_m["wall_s_warm"],
+        "parity": {
+            "min_psnr_device_vs_host_db": float(min(pair_psnr)),
+            "max_abs_psnr_delta_vs_baseline_db": psnr_delta,
+        },
+    }
+
+    if smoke:
+        # smoke also proves the Pallas streaming backend end-to-end
+        stream = _build_renderer(res, window, "device", backend="streaming",
+                                 grid_res=grid_res, num_samples=num_samples,
+                                 hole_cap=hole_cap)
+        stream_m, stream_frames = _run_variant(stream, traj)
+        s_psnr = [float(psnr(a, b)) for a, b in zip(host_frames, stream_frames)]
+        result["device_engine_streaming"] = stream_m
+        result["parity"]["min_psnr_streaming_vs_host_db"] = float(min(s_psnr))
+
+    out = out or (ROOT / "BENCH_render.json")
+    out.write_text(json.dumps(result, indent=2) + "\n")
+    print(json.dumps(result, indent=2))
+    print(f"# wrote {out}", flush=True)
+    return result
+
+
+# ---------------------------------------------------------------------------
+# legacy figure tables
+# ---------------------------------------------------------------------------
+
+
+def run_figures(only: str | None) -> int:
     from benchmarks import figures, roofline_table
 
     fns = list(figures.ALL) + [roofline_table.run]
     print("name,us_per_call,derived")
     failures = 0
     for fn in fns:
-        if args.only and args.only not in fn.__name__:
+        if only and only not in fn.__name__:
             continue
         t0 = time.time()
         try:
@@ -34,7 +173,32 @@ def main() -> None:
             print(f"{fn.__name__},0,ERROR:{type(e).__name__}:{e}", flush=True)
             traceback.print_exc(file=sys.stderr)
         print(f"# {fn.__name__} took {time.time()-t0:.1f}s", flush=True)
-    if failures:
+    return failures
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--figures", action="store_true",
+                    help="run the legacy per-figure CSV tables")
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny render bench (<60 s) on both NeRF backends")
+    ap.add_argument("--frames", type=int, default=32)
+    ap.add_argument("--res", type=int, default=64)
+    ap.add_argument("--window", type=int, default=4)
+    ap.add_argument("--out", default=None,
+                    help="output path for BENCH_render.json")
+    ap.add_argument("--only", default=None,
+                    help="substring filter on figure function names")
+    args = ap.parse_args()
+
+    if args.figures or args.only:
+        if run_figures(args.only):
+            sys.exit(1)
+        return
+    out = Path(args.out) if args.out else None
+    res = bench_render(frames=args.frames, res=args.res, window=args.window,
+                       smoke=args.smoke, out=out)
+    if res["speedup"] < 1.0 and res["speedup_warm"] < 1.0:
         sys.exit(1)
 
 

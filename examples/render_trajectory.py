@@ -1,12 +1,16 @@
 """Render a camera trajectory with SPARW and compare every paper variant.
 
   PYTHONPATH=src python examples/render_trajectory.py [--frames 12]
-      [--window 6] [--res 64] [--phi 4.0] [--save out.npz]
+      [--window 6] [--res 64] [--phi 4.0] [--engine device|host]
+      [--save out.npz]
 
 Outputs per-variant PSNR vs the full-frame baseline + measured work savings,
-and optionally saves the rendered frames.
+and optionally saves the rendered frames. ``--engine device`` (default) runs
+each warp window as one jitted device program; ``--engine host`` uses the
+seed per-frame host loop.
 """
 import argparse
+import time
 
 import jax.numpy as jnp
 import numpy as np
@@ -23,6 +27,7 @@ def main():
     ap.add_argument("--res", type=int, default=64)
     ap.add_argument("--scene", default="lego")
     ap.add_argument("--phi", type=float, default=None)
+    ap.add_argument("--engine", default="device", choices=["device", "host"])
     ap.add_argument("--save", default=None)
     args = ap.parse_args()
 
@@ -34,16 +39,19 @@ def main():
     traj = pipeline.orbit_trajectory(args.frames, step_deg=1.0)
 
     r = pipeline.CiceroRenderer(model, params, cam, window=args.window,
-                                phi_deg=args.phi)
+                                phi_deg=args.phi, engine=args.engine)
     print(f"full-frame baseline ({args.frames} frames)...")
     base = r.render_baseline(traj)
 
-    print(f"SPARW window={args.window} phi={args.phi}...")
+    print(f"SPARW window={args.window} phi={args.phi} engine={args.engine}...")
+    t0 = time.time()
     frames, stats = r.render_trajectory(traj)
+    wall = time.time() - t0
     p = np.mean([float(psnr(f, b)) for f, b in zip(frames, base)])
     print(f"  CICERO-{args.window}: {p:.2f} dB | "
           f"holes {stats.mean_hole_fraction*100:.1f}% | "
-          f"MLP work {stats.mlp_work_fraction*100:.1f}% of baseline")
+          f"MLP work {stats.mlp_work_fraction*100:.1f}% of baseline | "
+          f"{len(frames)/wall:.1f} fps incl. compile")
 
     ds2 = r.render_ds2(traj)
     p_ds = np.mean([float(psnr(f, b)) for f, b in zip(ds2, base)])

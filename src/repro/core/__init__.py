@@ -1,3 +1,5 @@
-from repro.core import costmodel, layout, pipeline, schedule, sparw, streaming
+from repro.core import (costmodel, engine, layout, pipeline, schedule, sparw,
+                        streaming)
 
-__all__ = ["costmodel", "layout", "pipeline", "schedule", "sparw", "streaming"]
+__all__ = ["costmodel", "engine", "layout", "pipeline", "schedule", "sparw",
+           "streaming"]

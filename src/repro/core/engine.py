@@ -1,0 +1,231 @@
+"""Device-resident SpaRW render engine (paper Fig. 10 as ONE device program).
+
+The seed renderer (`repro.core.pipeline.CiceroRenderer`'s host loop) drives
+SPARW from Python: every frame it round-trips the hole mask to the host
+(``np.nonzero``), re-slices variable-length ray batches (forcing an XLA
+recompile whenever the hole count changes) and never reaches the Pallas
+kernels. This module is the device-resident replacement — the architecture
+Potamoi/RT-NeRF argue for: keep the whole warp→gather→MLP→composite chain on
+the accelerator with no per-frame host synchronization.
+
+Design:
+
+* ``render_window`` is ONE jitted call per warp window: reference render →
+  N-way batched warp (``vmap`` over the window's target poses) → fixed-
+  capacity hole compaction → one batched sparse render of all N frames'
+  holes → combine. Zero host syncs inside a window (tested with a transfer
+  guard); stats leave the device only after the whole trajectory has been
+  dispatched.
+* Hole handling uses **fixed-capacity compaction**: hole pixel indices are
+  compacted (deterministic cumsum scatter, no ``nonzero``) into a static
+  ``[hole_cap]`` ray batch per frame, so every window compiles to the same
+  program regardless of how many pixels disoccluded. If any frame overflows
+  the capacity the window falls back to dense re-renders of the target
+  frames (mirroring the RIT overflow fallback in the streaming gather) —
+  the output is identical either way, only the work changes.
+* Full-frame renders run through ``lax.scan`` over fixed-size ray chunks
+  (static shapes, bounded memory) instead of a host chunk loop.
+* With ``NerfModel`` ``backend="streaming"`` the NeRF evaluation inside the
+  window runs through the Pallas kernels end-to-end
+  (``ops.gather_features_streaming`` + ``ops.nerf_mlp``); the MVoxel halo
+  table is built once per params (``prepare_streaming``) and enters the
+  jitted window function as a regular input.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import List, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import schedule, sparw
+from repro.nerf import rays
+from repro.utils import round_up
+
+
+@dataclass
+class RenderStats:
+    frames: int = 0
+    reference_renders: int = 0
+    warped_pixels: int = 0
+    sparse_pixels: int = 0
+    total_pixels: int = 0
+    hole_fractions: List[float] = field(default_factory=list)
+
+    @property
+    def mean_hole_fraction(self) -> float:
+        return float(np.mean(self.hole_fractions)) if self.hole_fractions else 0.0
+
+    @property
+    def mlp_work_fraction(self) -> float:
+        """Fraction of baseline MLP work actually executed (paper: ~12% at
+        window 16 ⇒ 88% avoided)."""
+        if self.total_pixels == 0:
+            return 1.0
+        full_equiv = self.reference_renders * (self.total_pixels / max(self.frames, 1))
+        return (full_equiv + self.sparse_pixels) / self.total_pixels
+
+
+class WindowResult(NamedTuple):
+    """Device-side output of one jitted warp-window render."""
+
+    frames: jnp.ndarray  # [N, H, W, 3]
+    hole_counts: jnp.ndarray  # [N] int32 — true (uncapped) hole counts
+    overflowed: jnp.ndarray  # [] bool — hole_cap exceeded, dense fallback ran
+
+
+class DeviceSparwEngine:
+    """Renders SPARW warp windows as single jitted device programs.
+
+    ``hole_cap`` is the static per-frame sparse-ray capacity (default: a
+    quarter of the frame — paper hole fractions are 2–6%, so this leaves a
+    wide margin before the dense fallback triggers).
+    """
+
+    def __init__(self, model, params: dict, cam: rays.Camera,
+                 window: int = 16, phi_deg: Optional[float] = None,
+                 hole_cap: Optional[int] = None, ray_chunk: int = 1 << 14):
+        self.model = model
+        self.cam = cam
+        self.window = window
+        self.phi_deg = phi_deg
+        hw = cam.height * cam.width
+        self.hole_cap = int(hole_cap) if hole_cap else round_up(max(hw // 4, 128), 128)
+        self.ray_chunk = min(ray_chunk, hw)
+        # streaming backend: MVoxel table built once here, never per frame
+        self.params = model.prepare_streaming(params)
+        self.num_window_calls = 0  # jitted window invocations (tests assert)
+        self._window_jit = jax.jit(self._render_window)
+
+    # ------------------------------------------------------------------
+    # fully in-graph primitives
+    # ------------------------------------------------------------------
+    def _render_rays_chunked(self, params: dict, o: jnp.ndarray, d: jnp.ndarray
+                             ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+        """``render_rays`` over [R,3] rays via ``lax.map`` chunks — static
+        shapes (pad + slice), bounded memory, no host loop."""
+        n = o.shape[0]
+        c = min(self.ray_chunk, n)
+        npad = round_up(n, c)
+        o = jnp.pad(o, ((0, npad - n), (0, 0)))
+        d = jnp.pad(d, ((0, npad - n), (0, 0)))
+        col, dep = jax.lax.map(
+            lambda od: self.model.render_rays(params, od[0], od[1]),
+            (o.reshape(-1, c, 3), d.reshape(-1, c, 3)))
+        return col.reshape(npad, 3)[:n], dep.reshape(npad)[:n]
+
+    def _render_full(self, params: dict, c2w: jnp.ndarray
+                     ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+        o, d = rays.generate_rays(self.cam, c2w)
+        col, dep = self._render_rays_chunked(params, o, d)
+        h, w = self.cam.height, self.cam.width
+        return col.reshape(h, w, 3), dep.reshape(h, w)
+
+    def _compact_holes(self, hflat: jnp.ndarray
+                       ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+        """[HW] bool -> ([hole_cap] pixel ids in raster order, true count).
+
+        Deterministic cumsum-scatter compaction (the in-graph replacement for
+        host ``np.nonzero``). Slots past the hole count alias pixel 0; they
+        are masked out when scattering rendered colors back.
+        """
+        cap = self.hole_cap
+        n = hflat.shape[0]
+        pos = jnp.cumsum(hflat) - 1  # rank among holes
+        slot = jnp.where(hflat & (pos < cap), pos, cap)
+        idx = jnp.zeros((cap + 1,), jnp.int32).at[slot].set(
+            jnp.arange(n, dtype=jnp.int32), mode="drop")
+        return idx[:cap], hflat.sum()
+
+    def _render_window(self, params: dict, ref_pose: jnp.ndarray,
+                       tgt_poses: jnp.ndarray) -> WindowResult:
+        """The whole warp window — one traced function, no host round-trips."""
+        h, w = self.cam.height, self.cam.width
+        hw = h * w
+        cap = self.hole_cap
+        n = tgt_poses.shape[0]
+
+        # ① reference render, shared by all N targets of the window
+        rgb_ref, dep_ref = self._render_full(params, ref_pose)
+
+        # ②③ batched warp: all targets against the one reference
+        warped = jax.vmap(lambda tgt: sparw.warp_frame(
+            rgb_ref, dep_ref, ref_pose, tgt, self.cam, phi_deg=self.phi_deg)
+        )(tgt_poses)
+        holes = warped.holes.reshape(n, hw)
+        idx, counts = jax.vmap(self._compact_holes)(holes)
+        overflowed = jnp.max(counts) > cap
+
+        o_all, d_all = rays.generate_rays_batch(self.cam, tgt_poses)
+
+        # ④ sparse NeRF of the disoccluded pixels — one batched render of all
+        # N frames' compacted holes ...
+        def sparse_path(_):
+            osel = jnp.take_along_axis(o_all, idx[..., None], axis=1)
+            dsel = jnp.take_along_axis(d_all, idx[..., None], axis=1)
+            col, _ = self._render_rays_chunked(
+                params, osel.reshape(-1, 3), dsel.reshape(-1, 3))
+            col = col.reshape(n, cap, 3)
+            valid = jnp.arange(cap)[None, :] < counts[:, None]
+
+            def scatter_back(idx_f, col_f, valid_f):
+                buf = jnp.zeros((hw + 1, 3), col_f.dtype).at[
+                    jnp.where(valid_f, idx_f, hw)].set(col_f, mode="drop")
+                return buf[:hw]
+
+            return jax.vmap(scatter_back)(idx, col, valid)
+
+        # ... unless some frame overflowed the capacity: dense re-render of
+        # every target (same output, more work — the RIT-overflow discipline)
+        def dense_path(_):
+            col, _ = jax.lax.map(
+                lambda p: self._render_rays_chunked(
+                    params, *rays.generate_rays(self.cam, p)), tgt_poses)
+            return col  # [N, HW, 3]
+
+        sparse_rgb = jax.lax.cond(overflowed, dense_path, sparse_path, None)
+
+        frames = jnp.where(holes[..., None], sparse_rgb,
+                           warped.rgb.reshape(n, hw, 3))
+        return WindowResult(frames.reshape(n, h, w, 3),
+                            counts.astype(jnp.int32), overflowed)
+
+    # ------------------------------------------------------------------
+    def render_window(self, ref_pose: jnp.ndarray, tgt_poses: jnp.ndarray
+                      ) -> WindowResult:
+        """Render one warp window (N target poses vs a shared reference) as a
+        single jitted call. ``jax.jit`` re-traces only per distinct N."""
+        self.num_window_calls += 1
+        return self._window_jit(self.params, ref_pose, tgt_poses)
+
+    def render_trajectory(self, poses: List[jnp.ndarray]
+                          ) -> Tuple[List[jnp.ndarray], RenderStats]:
+        """SPARW rendering of a pose trajectory (offtraj schedule).
+
+        Dispatches every window before reading any statistic back, so the
+        only host syncs are the final stats/frames conversion — never inside
+        a window.
+        """
+        plan = schedule.WarpSchedule(self.window, "offtraj").windows(poses)
+        hw = self.cam.height * self.cam.width
+        frames_out: List[Optional[jnp.ndarray]] = [None] * len(poses)
+        stats = RenderStats()
+        results = []
+        for win in plan:
+            tgt = jnp.stack([poses[i] for i in win["frames"]])
+            results.append((win["frames"], self.render_window(win["ref_pose"], tgt)))
+            stats.reference_renders += 1
+        for idxs, res in results:  # host conversion after all dispatches
+            counts = np.asarray(res.hole_counts)
+            ovf = bool(res.overflowed)
+            for j, f in enumerate(idxs):
+                frames_out[f] = res.frames[j]
+                c = int(counts[j])
+                stats.frames += 1
+                stats.total_pixels += hw
+                stats.hole_fractions.append(c / hw)
+                stats.sparse_pixels += hw if ovf else c
+                stats.warped_pixels += hw - c
+        return [f for f in frames_out if f is not None], stats

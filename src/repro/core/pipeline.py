@@ -1,8 +1,16 @@
 """CiceroRenderer — the end-to-end SPARW rendering pipeline (paper Fig. 10).
 
-Host-side frame loop driving jitted JAX stages:
-  reference frames → full-frame NeRF render (green path)
-  target frames    → warp (①–③) + sparse NeRF of disoccluded pixels (④)
+Two engines drive the same algorithm:
+
+* ``engine="device"`` (default for the off-trajectory schedule) — the
+  device-resident path in :mod:`repro.core.engine`: each warp window
+  (reference render → batched warp → fixed-capacity sparse render →
+  combine) is ONE jitted call with zero host synchronization inside the
+  window. This is the architecture the paper's speedups assume.
+* ``engine="host"`` — the seed host-side frame loop, kept as the reference
+  implementation: per-frame ``np.nonzero`` hole round-trips and
+  variable-length ray chunks. Used for parity tests, the TEMP-N baseline
+  (inherently serialized) and as the benchmark's "before" measurement.
 
 Also provides the paper's comparison baselines: full NeRF every frame,
 DS-2 (render at half res + bilinear upsample), and TEMP-N (warp from the
@@ -10,7 +18,6 @@ previously *rendered* frame — serialized, error-accumulating).
 """
 from __future__ import annotations
 
-from dataclasses import dataclass, field
 from typing import Dict, List, Optional, Tuple
 
 import jax
@@ -18,55 +25,47 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import schedule, sparw
+from repro.core.engine import DeviceSparwEngine, RenderStats  # noqa: F401 (re-export)
 from repro.nerf import models, rays
 from repro.utils import psnr
-
-
-@dataclass
-class RenderStats:
-    frames: int = 0
-    reference_renders: int = 0
-    warped_pixels: int = 0
-    sparse_pixels: int = 0
-    total_pixels: int = 0
-    hole_fractions: List[float] = field(default_factory=list)
-
-    @property
-    def mean_hole_fraction(self) -> float:
-        return float(np.mean(self.hole_fractions)) if self.hole_fractions else 0.0
-
-    @property
-    def mlp_work_fraction(self) -> float:
-        """Fraction of baseline MLP work actually executed (paper: ~12% at
-        window 16 ⇒ 88% avoided)."""
-        if self.total_pixels == 0:
-            return 1.0
-        full_equiv = self.reference_renders * (self.total_pixels / max(self.frames, 1))
-        return (full_equiv + self.sparse_pixels) / self.total_pixels
 
 
 class CiceroRenderer:
     def __init__(self, model: models.NerfModel, params: dict, cam: rays.Camera,
                  window: int = 16, phi_deg: Optional[float] = None,
-                 mode: str = "offtraj"):
+                 mode: str = "offtraj", engine: str = "device",
+                 hole_cap: Optional[int] = None):
         self.model = model
-        self.params = params
+        # streaming backend: hoist the MVoxel halo re-layout out of every
+        # render path (host loop, baselines, DS-2) — no-op otherwise
+        self.params = model.prepare_streaming(params)
         self.cam = cam
         self.window = window
         self.phi_deg = phi_deg
         self.mode = mode
-        self._render_rays = jax.jit(model.render_rays)
+        self.engine = engine
+        self.hole_cap = hole_cap
+        self._render_rays = model.render_rays_jit  # cached once per model
         self._warp = jax.jit(
             lambda rgb, dep, p_ref, p_tgt: sparw.warp_frame(
                 rgb, dep, p_ref, p_tgt, cam, phi_deg=phi_deg))
+        self._device_engine: Optional[DeviceSparwEngine] = None
+
+    @property
+    def device_engine(self) -> DeviceSparwEngine:
+        if self._device_engine is None:
+            self._device_engine = DeviceSparwEngine(
+                self.model, self.params, self.cam, window=self.window,
+                phi_deg=self.phi_deg, hole_cap=self.hole_cap)
+        return self._device_engine
 
     # ------------------------------------------------------------------
     def full_frame(self, c2w: jnp.ndarray) -> Tuple[jnp.ndarray, jnp.ndarray]:
         return self.model.render_image(self.params, self.cam, c2w)
 
     def sparse_frame(self, c2w: jnp.ndarray, holes: np.ndarray) -> jnp.ndarray:
-        """Render only the disoccluded pixels (capacity = exact hole count,
-        chunked). Returns a full [H,W,3] image with non-hole pixels zero."""
+        """Host-loop sparse render: capacity = exact hole count, chunked.
+        Returns a full [H,W,3] image with non-hole pixels zero."""
         h, w = self.cam.height, self.cam.width
         o, d = rays.generate_rays(self.cam, c2w)
         idx = np.nonzero(holes.reshape(-1))[0]
@@ -81,7 +80,20 @@ class CiceroRenderer:
     # ------------------------------------------------------------------
     def render_trajectory(self, poses: List[jnp.ndarray]
                           ) -> Tuple[List[jnp.ndarray], RenderStats]:
-        """SPARW rendering of a pose trajectory. Returns (frames, stats)."""
+        """SPARW rendering of a pose trajectory. Returns (frames, stats).
+
+        Routes through the device-resident engine except for the serialized
+        TEMP-N mode (whose reference depends on the previous *rendered*
+        frame) or when ``engine="host"`` was requested explicitly.
+        """
+        if self.engine == "device" and self.mode == "offtraj":
+            return self.device_engine.render_trajectory(poses)
+        return self.render_trajectory_host(poses)
+
+    def render_trajectory_host(self, poses: List[jnp.ndarray]
+                               ) -> Tuple[List[jnp.ndarray], RenderStats]:
+        """The seed host-side frame loop (one frame at a time, hole mask
+        synced to host every frame). Reference implementation + TEMP-N."""
         stats = RenderStats()
         plan = schedule.WarpSchedule(self.window, self.mode).plan(poses)
         frames: List[Optional[jnp.ndarray]] = [None] * len(poses)

@@ -67,8 +67,11 @@ class WarpSchedule:
     window: int = 16
     mode: str = "offtraj"
 
-    def plan(self, poses: List[jnp.ndarray]) -> List[dict]:
-        """Returns per-frame records: {frame, ref_pose, ref_is_frame_idx}.
+    def windows(self, poses: List[jnp.ndarray]) -> List[dict]:
+        """Whole-window records: {window_start, ref_pose, ref_frame_idx,
+        frames} — the unit the device-resident engine renders in ONE jitted
+        call (all target frames of a window batched against their shared
+        reference).
 
         For 'offtraj', ref_pose is a new extrapolated pose; the first window
         bootstraps with the first trajectory pose as reference.
@@ -94,7 +97,18 @@ class WarpSchedule:
                 ref_pose = poses[ref_idx]
             else:
                 raise ValueError(self.mode)
-            for f in range(k, min(k + self.window, n)):
-                out.append({"frame": f, "window_start": k, "ref_pose": ref_pose,
-                            "ref_frame_idx": ref_idx})
+            out.append({"window_start": k, "ref_pose": ref_pose,
+                        "ref_frame_idx": ref_idx,
+                        "frames": list(range(k, min(k + self.window, n)))})
+        return out
+
+    def plan(self, poses: List[jnp.ndarray]) -> List[dict]:
+        """Per-frame records: {frame, window_start, ref_pose, ref_frame_idx}
+        (the host-loop renderer's view of :meth:`windows`)."""
+        out = []
+        for win in self.windows(poses):
+            for f in win["frames"]:
+                out.append({"frame": f, "window_start": win["window_start"],
+                            "ref_pose": win["ref_pose"],
+                            "ref_frame_idx": win["ref_frame_idx"]})
         return out

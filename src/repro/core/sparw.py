@@ -70,8 +70,10 @@ def warp_frame(
     h, w = depth_ref.shape
     n = h * w
     pts_ref = frame_to_pointcloud(depth_ref, cam)
+    # world-space points computed once: reused for the Eq. 2 transform below
+    # and for the warp-angle heuristic (transform_points would recompute it)
     world = pts_ref @ c2w_ref[:3, :3].T + c2w_ref[:3, 3]
-    pts_tgt = transform_points(pts_ref, c2w_ref, c2w_tgt)
+    pts_tgt = (world - c2w_tgt[:3, 3]) @ c2w_tgt[:3, :3]  # R^T x == x @ R
     u, v, z = project(pts_tgt, cam)
 
     ui = jnp.round(u).astype(jnp.int32)

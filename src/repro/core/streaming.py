@@ -21,6 +21,13 @@ Pieces:
                             the correctness contract, tested).
 * ``access_trace`` / cache + streaming statistics for the cost model and the
   Fig. 4/5 reproductions.
+
+Hot-path wiring: ``NerfModel`` with ``backend="streaming"`` routes
+``query_features`` through ``kernels.ops.gather_features_streaming`` (the
+Pallas GU kernel over these RIT/MVoxel structures); ``build_mvoxel_table``
+is hoisted out of the frame loop by ``NerfModel.prepare_streaming`` and
+cached per params, so the device-resident engine pays the re-layout once
+per table, not once per frame.
 """
 from __future__ import annotations
 
@@ -97,8 +104,6 @@ def build_mvoxel_table(table: jnp.ndarray, cfg: StreamingCfg) -> jnp.ndarray:
     # pad so every halo block is full even at the boundary
     pad = m * e + 1 - res
     grid = jnp.pad(grid, ((0, pad), (0, pad), (0, pad), (0, 0)), mode="edge")
-    blocks = []
-    # static python loop (num_mv is small: e.g. 8^3=512); stacked once per frame
     idx = jnp.arange(m) * e
     # vectorized extraction via gather of start indices
     starts = jnp.stack(jnp.meshgrid(idx, idx, idx, indexing="ij"), -1).reshape(-1, 3)

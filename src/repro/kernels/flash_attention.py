@@ -19,7 +19,8 @@ NEG_INF = -1e30
 
 
 def _kernel(q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr, *, causal: bool,
-            sm_scale: float, block_q: int, block_k: int):
+            sm_scale: float, block_q: int, block_k: int,
+            kv_len: int | None):
     qi = pl.program_id(2)
     ki = pl.program_id(3)
     nk = pl.num_programs(3)
@@ -39,6 +40,11 @@ def _kernel(q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr, *, causal: bool,
         qpos = qi * block_q + jax.lax.broadcasted_iota(jnp.int32, s.shape, 0)
         kpos = ki * block_k + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
         s = jnp.where(qpos >= kpos, s, NEG_INF)
+    if kv_len is not None:
+        # mask zero-padded KV rows (seq padded up to a block multiple by
+        # ops.py) so they never contribute to the softmax
+        kpos = ki * block_k + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+        s = jnp.where(kpos < kv_len, s, NEG_INF)
 
     m_prev = m_scr[...]
     l_prev = l_scr[...]
@@ -60,14 +66,17 @@ def _kernel(q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr, *, causal: bool,
 
 @functools.partial(jax.jit,
                    static_argnames=("causal", "block_q", "block_k",
-                                    "interpret", "sm_scale"))
+                                    "interpret", "sm_scale", "kv_len"))
 def flash_attention(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray, *,
                     causal: bool = True, sm_scale: float | None = None,
                     block_q: int = 128, block_k: int = 128,
+                    kv_len: int | None = None,
                     interpret: bool = True) -> jnp.ndarray:
     """q [B, H, Sq, D]; k/v [B, KVH, Sk, D] with H % KVH == 0 (GQA).
 
-    Sq/Sk must be multiples of the block sizes (ops.py pads).
+    Sq/Sk must be multiples of the block sizes (ops.py pads). When the KV
+    sequence was padded, ``kv_len`` is the true (pre-padding) length: rows at
+    or beyond it are masked to -inf inside the kernel.
     """
     b, h, sq, d = q.shape
     _, kvh, sk, _ = k.shape
@@ -80,7 +89,7 @@ def flash_attention(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray, *,
     assert sq % bq == 0 and sk % bk == 0, (sq, sk, bq, bk)
     grid = (b, h, sq // bq, sk // bk)
     kernel = functools.partial(_kernel, causal=causal, sm_scale=sm_scale,
-                               block_q=bq, block_k=bk)
+                               block_q=bq, block_k=bk, kv_len=kv_len)
     return pl.pallas_call(
         kernel,
         grid=grid,

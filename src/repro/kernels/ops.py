@@ -26,17 +26,24 @@ from repro.utils import round_up
 
 def gather_features_streaming(table: jnp.ndarray, points: jnp.ndarray,
                               cfg: streaming.StreamingCfg, *,
+                              mv_table: jnp.ndarray | None = None,
                               interpret: bool = True) -> jnp.ndarray:
     """Memory-centric feature gather of ``points`` from a dense vertex table.
 
-    Builds the MVoxel halo table + RIT, runs the Pallas GU kernel per MVoxel,
-    scatters results back to sample order. RIT-overflow samples (capacity
-    exceeded) take the reference (non-streaming) path — the paper's fallback.
-    Output matches ``grids.gather_trilerp_ref`` on the original table.
+    Builds the RIT, runs the Pallas GU kernel per MVoxel, scatters results
+    back to sample order. RIT-overflow samples (capacity exceeded) take the
+    reference (non-streaming) path — the paper's fallback. Output matches
+    ``grids.gather_trilerp_ref`` on the original table.
+
+    ``mv_table`` is the per-MVoxel halo re-layout of ``table``; pass the
+    prebuilt one (``NerfModel.prepare_streaming`` caches it per params) so the
+    table build is hoisted out of the per-frame hot path. When omitted it is
+    built here (correct, but re-laid-out on every call).
     """
     s = points.shape[0]
     c = table.shape[-1]
-    mv_table = streaming.build_mvoxel_table(table, cfg)  # [M, P, C]
+    if mv_table is None:
+        mv_table = streaming.build_mvoxel_table(table, cfg)  # [M, P, C]
     mv = streaming.mvoxel_ids(points, cfg)
     rit = streaming.build_rit(mv, cfg)
     local_ids, w = streaming.local_corner_ids(points, cfg)
@@ -101,15 +108,10 @@ def mha(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray, *, causal: bool = True,
     qp = jnp.pad(q, ((0, 0), (0, 0), (0, sqp - sq), (0, 0)))
     kp = jnp.pad(k, ((0, 0), (0, 0), (0, skp - sk), (0, 0)))
     vp = jnp.pad(v, ((0, 0), (0, 0), (0, skp - sk), (0, 0)))
-    if skp > sk:
-        # mask padded kv rows via a -inf key trick: zero-pad then causal mask
-        # handles it only for causal; for non-causal mask explicitly below
-        pass
     sm_scale = d**-0.5
+    # padded KV rows are masked explicitly inside the kernel (kv_len)
     out = _fa.flash_attention(qp, kp, vp, causal=causal, sm_scale=sm_scale,
-                              block_q=bq, block_k=bk, interpret=interpret)
-    if skp > sk and not causal:
-        # redo with explicit masking fallback (rare path: tiny test shapes)
-        from repro.kernels import ref as _ref
-        return _ref.attention_ref(q, k, v, causal=causal)
+                              block_q=bq, block_k=bk,
+                              kv_len=sk if skp > sk else None,
+                              interpret=interpret)
     return out[:, :, :sq]

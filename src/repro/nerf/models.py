@@ -1,9 +1,20 @@
 """NeRF models: grid representation + decoder + volume renderer.
 
-``NerfModel`` implements the paper's three-stage pipeline in the *pixel-centric*
-order (the baseline the paper starts from). The memory-centric / streaming
-order lives in ``repro.core.streaming`` and must produce identical images
-(tested). An ``OracleModel`` renders the analytic scene directly (exact depth,
+``NerfModel`` implements the paper's three-stage pipeline. Two execution
+backends (``NerfConfig.backend``):
+
+* ``"reference"`` — pixel-centric gather + plain-jnp decoder (the baseline
+  order the paper starts from).
+* ``"streaming"`` — memory-centric order through the Pallas kernels:
+  ``kernels.ops.gather_features_streaming`` (MVoxel-resident GU gather) and
+  ``kernels.ops.nerf_mlp`` (fused decoder). Must produce images matching the
+  reference backend (tested); only the memory/work schedule changes. The
+  MVoxel halo re-layout of the feature table is built once per params via
+  :meth:`NerfModel.prepare_streaming` and travels inside ``params`` so the
+  per-frame hot path never rebuilds it. Non-dense representations (hash /
+  factorized) keep the reference path — the paper's NGP-level fallback.
+
+An ``oracle`` model renders the analytic scene directly (exact depth,
 view-dependent radiance) and is used for warp-threshold experiments.
 """
 from __future__ import annotations
@@ -33,6 +44,9 @@ class NerfConfig:
     near: float = 0.5
     far: float = 6.0
     white_bkgd: bool = True
+    backend: str = "reference"  # reference | streaming (Pallas hot path)
+    stream_mvoxel_edge: int = 8  # paper: 8^3-point MVoxels
+    stream_capacity: int = 512  # RIT entry capacity (overflow -> fallback)
 
     @property
     def dense_cfg(self) -> grids.DenseGridCfg:
@@ -79,6 +93,10 @@ class NerfModel:
     def __init__(self, cfg: NerfConfig, scene: Optional[scenes.Scene] = None):
         self.cfg = cfg
         self.scene = scene
+        self._render_rays_jit: Optional[callable] = None
+        # (feature table, its prebuilt MVoxel halo table) — the key is held
+        # so an `is` hit can never alias a recycled object
+        self._mv_table_cache: Optional[tuple] = None
 
     # ------------------------------------------------------------------
     def init(self, key: jax.Array) -> dict:
@@ -104,8 +122,47 @@ class NerfModel:
         return {"table": table, "decoder": {}}
 
     # ------------------------------------------------------------------
-    def query_features(self, params: dict, points: jnp.ndarray) -> jnp.ndarray:
+    @property
+    def streaming_cfg(self):
+        """StreamingCfg matching this model's dense grid (backend='streaming')."""
+        from repro.core import streaming as _streaming
+
         c = self.cfg
+        return _streaming.StreamingCfg(grid_res=c.grid_res,
+                                       mvoxel_edge=c.stream_mvoxel_edge,
+                                       capacity=c.stream_capacity)
+
+    def prepare_streaming(self, params: dict) -> dict:
+        """Attach the prebuilt MVoxel halo table for the streaming backend.
+
+        The re-layout is cached per params (keyed on the feature table's
+        identity) so it is built exactly once and hoisted out of every frame
+        loop; it travels inside ``params`` as ``"mv_table"`` so jitted render
+        functions receive it as a plain input. No-op for other backends/kinds.
+        """
+        if self.cfg.backend != "streaming" or self.cfg.kind != "dvgo" \
+                or "mv_table" in params:
+            return params
+        from repro.core import streaming as _streaming
+
+        table = params["table"]
+        if self._mv_table_cache is None or self._mv_table_cache[0] is not table:
+            self._mv_table_cache = (table, _streaming.build_mvoxel_table(
+                table, self.streaming_cfg))  # keep one entry
+        return {**params, "mv_table": self._mv_table_cache[1]}
+
+    def query_features(self, params: dict, points: jnp.ndarray,
+                       backend: Optional[str] = None) -> jnp.ndarray:
+        c = self.cfg
+        backend = backend or c.backend
+        if backend == "streaming" and c.kind == "dvgo":
+            from repro.kernels import ops
+
+            return ops.gather_features_streaming(
+                params["table"], points, self.streaming_cfg,
+                mv_table=params.get("mv_table"))
+        # hash / factorized representations have no dense vertex walk — they
+        # stay on the reference path (the paper's NGP level-fallback)
         if c.kind == "dvgo":
             return grids.dense_query(params, points, c.dense_cfg)
         if c.kind == "ngp":
@@ -114,14 +171,20 @@ class NerfModel:
             return grids.tensorf_query(params, points, c.tensorf_cfg)
         raise ValueError(c.kind)
 
-    def query_field(self, params: dict, points: jnp.ndarray, dirs: jnp.ndarray
+    def query_field(self, params: dict, points: jnp.ndarray, dirs: jnp.ndarray,
+                    backend: Optional[str] = None
                     ) -> Tuple[jnp.ndarray, jnp.ndarray]:
         """(sigma [S], rgb [S,3]) at sample points."""
         if self.cfg.kind == "oracle":
             assert self.scene is not None
             return scenes.scene_density(self.scene, points), scenes.scene_radiance(
                 self.scene, points, dirs)
-        feats = self.query_features(params, points)
+        backend = backend or self.cfg.backend
+        feats = self.query_features(params, points, backend=backend)
+        if backend == "streaming" and self.cfg.decoder == "mlp":
+            from repro.kernels import ops
+
+            return ops.nerf_mlp(feats, mlp._dir_enc(dirs), params["decoder"])
         return mlp.decode(params["decoder"], feats, dirs, self.cfg.decoder_cfg)
 
     # ------------------------------------------------------------------
@@ -140,13 +203,21 @@ class NerfModel:
         color, depth, _ = volrend.composite(sigma, rgb, t_vals, c.far, c.white_bkgd)
         return color, depth
 
+    @property
+    def render_rays_jit(self):
+        """Jitted ``render_rays``, created once per model (not per call) so
+        XLA's compile cache is shared by every renderer using this model."""
+        if self._render_rays_jit is None:
+            self._render_rays_jit = jax.jit(self.render_rays)
+        return self._render_rays_jit
+
     def render_image(self, params: dict, cam: rays.Camera, c2w: jnp.ndarray,
                      chunk: int = 1 << 14) -> Tuple[jnp.ndarray, jnp.ndarray]:
         """Full-frame render (chunked over rays to bound memory)."""
         o, d = rays.generate_rays(cam, c2w)
         n = o.shape[0]
         colors, depths = [], []
-        render = jax.jit(self.render_rays)
+        render = self.render_rays_jit
         for i in range(0, n, chunk):
             col, dep = render(params, o[i : i + chunk], d[i : i + chunk])
             colors.append(col)

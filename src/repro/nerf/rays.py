@@ -5,11 +5,13 @@ matrix; camera looks down +Z in camera space; image (v, u) = (row, col).
 """
 from __future__ import annotations
 
+import functools
 from dataclasses import dataclass
 from typing import Tuple
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 
 @dataclass(frozen=True)
@@ -57,24 +59,41 @@ def orbit_pose(t: jnp.ndarray, radius: float = 2.6, height: float = 0.9,
     return look_at(eye, target)
 
 
+@functools.lru_cache(maxsize=None)
+def camera_dirs(cam: Camera) -> np.ndarray:
+    """Camera-space per-pixel ray directions [H*W, 3] (row-major).
+
+    Pose-independent, so it is computed once per camera (a host-side numpy
+    constant — cache-safe under tracing); inside a jitted trace it folds to
+    a constant instead of re-deriving the pixel grid for every pose of a
+    batched warp window.
+    """
+    v, u = np.meshgrid(
+        np.arange(cam.height, dtype=np.float32),
+        np.arange(cam.width, dtype=np.float32),
+        indexing="ij",
+    )
+    x = (u + 0.5 - cam.cx) / cam.focal
+    y = (v + 0.5 - cam.cy) / cam.focal
+    return np.stack([x, y, np.ones_like(x)], axis=-1).reshape(-1, 3)
+
+
 def generate_rays(cam: Camera, c2w: jnp.ndarray) -> Tuple[jnp.ndarray, jnp.ndarray]:
     """Per-pixel ray origins/directions in world space.
 
     Returns (origins [H*W, 3], directions [H*W, 3]); directions are unit-norm.
     Row-major pixel order — the *pixel-centric* order the paper starts from.
     """
-    v, u = jnp.meshgrid(
-        jnp.arange(cam.height, dtype=jnp.float32),
-        jnp.arange(cam.width, dtype=jnp.float32),
-        indexing="ij",
-    )
-    x = (u + 0.5 - cam.cx) / cam.focal
-    y = (v + 0.5 - cam.cy) / cam.focal
-    dirs_cam = jnp.stack([x, y, jnp.ones_like(x)], axis=-1).reshape(-1, 3)
-    dirs_world = dirs_cam @ c2w[:3, :3].T
+    dirs_world = jnp.asarray(camera_dirs(cam)) @ c2w[:3, :3].T
     dirs_world = dirs_world / jnp.linalg.norm(dirs_world, axis=-1, keepdims=True)
     origins = jnp.broadcast_to(c2w[:3, 3], dirs_world.shape)
     return origins, dirs_world
+
+
+def generate_rays_batch(cam: Camera, c2ws: jnp.ndarray
+                        ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Rays for a whole pose batch [N,4,4] -> ([N,H*W,3], [N,H*W,3])."""
+    return jax.vmap(lambda p: generate_rays(cam, p))(c2ws)
 
 
 def sample_along_rays(

@@ -1,0 +1,30 @@
+"""Benchmark smoke: the render harness runs end-to-end on both backends and
+emits a well-formed BENCH_render.json (marked slow — a real tiny render)."""
+import json
+import sys
+from pathlib import Path
+
+import pytest
+
+sys.path.insert(0, str(Path(__file__).resolve().parents[1]))
+
+
+@pytest.mark.slow
+def test_bench_render_smoke(tmp_path):
+    from benchmarks.run import bench_render
+
+    out = tmp_path / "BENCH_render.json"
+    res = bench_render(smoke=True, out=out)
+    assert out.exists()
+    on_disk = json.loads(out.read_text())
+    assert on_disk["config"]["smoke"] is True
+    # parity: the device engine reproduces the seed host loop...
+    assert res["parity"]["min_psnr_device_vs_host_db"] >= 60.0
+    assert res["parity"]["max_abs_psnr_delta_vs_baseline_db"] <= 0.1
+    # ...and so does the Pallas streaming backend
+    assert res["parity"]["min_psnr_streaming_vs_host_db"] >= 60.0
+    # the device engine must not be slower than the seed host loop
+    assert res["speedup"] > 1.0 or res["speedup_warm"] > 1.0
+    for key in ("wall_s_cold", "wall_s_warm", "fps_warm", "hole_fraction",
+                "mlp_work_fraction"):
+        assert key in res["device_engine"]

@@ -118,6 +118,19 @@ def test_flash_attention(b, h, kvh, s, d, causal):
                                rtol=1e-4)
 
 
+@pytest.mark.parametrize("s,causal", [(100, False), (100, True), (70, False)])
+def test_flash_attention_padded_kv_masked(s, causal):
+    """Non-block-multiple seq lengths: padded KV rows are masked inside the
+    kernel (no silent fallback to the reference implementation)."""
+    q = jax.random.normal(jax.random.key(0), (1, 2, s, 32))
+    k = jax.random.normal(jax.random.key(1), (1, 2, s, 32))
+    v = jax.random.normal(jax.random.key(2), (1, 2, s, 32))
+    got = ops.mha(q, k, v, causal=causal, block_q=64, block_k=64)
+    want = ref.attention_ref(q, k, v, causal=causal)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=2e-5,
+                               rtol=1e-4)
+
+
 def test_flash_attention_block_invariance():
     q = jax.random.normal(jax.random.key(3), (1, 2, 256, 64))
     k = jax.random.normal(jax.random.key(4), (1, 2, 256, 64))
