@@ -1,0 +1,34 @@
+#!/usr/bin/env bash
+# Make-free CI entry point: tier-1 tests + the multi-session render smoke.
+#
+#   ./scripts/ci.sh         # fast lane: tier-1 minus slow-marked tests,
+#                           # then the <120 s serving smoke bench
+#   ./scripts/ci.sh --full  # everything, including slow-marked tests
+#
+# The smoke bench (`benchmarks/run.py --smoke --sessions 2`) is the same
+# run `tests/test_bench_smoke.py::test_bench_multi_session_smoke` wraps as
+# a slow-marked test; running it here keeps the fast lane's pytest pass
+# free of double work (hence `-m "not slow"`).
+set -euo pipefail
+cd "$(dirname "$0")/.."
+export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
+export JAX_PLATFORMS="${JAX_PLATFORMS:-cpu}"
+
+MARK='not slow'
+if [[ "${1:-}" == "--full" ]]; then
+  MARK=''
+fi
+
+echo "== tier-1 tests =="
+python -m pytest -x -q ${MARK:+-m "$MARK"}
+
+echo "== multi-session render smoke (<120 s budget) =="
+start=$(date +%s)
+python benchmarks/run.py --smoke --sessions 2 --out /tmp/BENCH_render_ci.json
+elapsed=$(( $(date +%s) - start ))
+echo "smoke bench took ${elapsed}s"
+if (( elapsed > 120 )); then
+  echo "FAIL: smoke bench exceeded the 120 s budget" >&2
+  exit 1
+fi
+echo "CI OK"

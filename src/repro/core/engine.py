@@ -25,6 +25,13 @@ Design:
   the output is identical either way, only the work changes.
 * Full-frame renders run through ``lax.scan`` over fixed-size ray chunks
   (static shapes, bounded memory) instead of a host chunk loop.
+* ``render_windows`` adds a leading **session axis**: S concurrent client
+  trajectories' windows (one reference pose each) render as ONE jitted
+  call — ``vmap`` over per-session reference frames and hole compaction,
+  with the model params (and the streaming backend's MVoxel table)
+  broadcast so one copy serves every session. The overflow→dense fallback
+  is isolated per session. This is the device half of the multi-session
+  serving engine (:mod:`repro.serve.render_engine`).
 * With ``NerfModel`` ``backend="streaming"`` the NeRF evaluation inside the
   window runs through the Pallas kernels end-to-end
   (``ops.gather_features_streaming`` + ``ops.nerf_mlp``); the MVoxel halo
@@ -67,6 +74,16 @@ class RenderStats:
         full_equiv = self.reference_renders * (self.total_pixels / max(self.frames, 1))
         return (full_equiv + self.sparse_pixels) / self.total_pixels
 
+    def record_frame(self, hole_count: int, overflowed: bool, hw: int) -> None:
+        """Accumulate one rendered frame's hole statistics (shared by the
+        single-session trajectory readback and the serving engine's
+        finalize — the overflow accounting must stay identical)."""
+        self.frames += 1
+        self.total_pixels += hw
+        self.hole_fractions.append(hole_count / hw)
+        self.sparse_pixels += hw if overflowed else hole_count
+        self.warped_pixels += hw - hole_count
+
 
 class WindowResult(NamedTuple):
     """Device-side output of one jitted warp-window render."""
@@ -74,6 +91,18 @@ class WindowResult(NamedTuple):
     frames: jnp.ndarray  # [N, H, W, 3]
     hole_counts: jnp.ndarray  # [N] int32 — true (uncapped) hole counts
     overflowed: jnp.ndarray  # [] bool — hole_cap exceeded, dense fallback ran
+
+
+class BatchedWindowResult(NamedTuple):
+    """Device-side output of one jitted multi-session window render.
+
+    Leading axis is the *session* (one concurrent client trajectory per
+    row); the second axis is the session's warp window.
+    """
+
+    frames: jnp.ndarray  # [S, N, H, W, 3]
+    hole_counts: jnp.ndarray  # [S, N] int32 — true (uncapped) hole counts
+    overflowed: jnp.ndarray  # [S] bool — per-session dense-fallback flag
 
 
 class DeviceSparwEngine:
@@ -98,6 +127,7 @@ class DeviceSparwEngine:
         self.params = model.prepare_streaming(params)
         self.num_window_calls = 0  # jitted window invocations (tests assert)
         self._window_jit = jax.jit(self._render_window)
+        self._windows_jit = jax.jit(self._render_windows)  # [S]-batched
 
     # ------------------------------------------------------------------
     # fully in-graph primitives
@@ -139,58 +169,105 @@ class DeviceSparwEngine:
             jnp.arange(n, dtype=jnp.int32), mode="drop")
         return idx[:cap], hflat.sum()
 
-    def _render_window(self, params: dict, ref_pose: jnp.ndarray,
-                       tgt_poses: jnp.ndarray) -> WindowResult:
-        """The whole warp window — one traced function, no host round-trips."""
-        h, w = self.cam.height, self.cam.width
-        hw = h * w
-        cap = self.hole_cap
-        n = tgt_poses.shape[0]
+    def _warp_and_compact(self, params: dict, ref_pose: jnp.ndarray,
+                          tgt_poses: jnp.ndarray):
+        """Steps ①–③ of a window + hole compaction.
 
+        Returns (warped_rgb [N,HW,3], holes [N,HW] bool, idx [N,cap],
+        counts [N]) — shared by the single-session and session-batched
+        window renderers.
+        """
+        hw = self.cam.height * self.cam.width
+        n = tgt_poses.shape[0]
         # ① reference render, shared by all N targets of the window
         rgb_ref, dep_ref = self._render_full(params, ref_pose)
-
         # ②③ batched warp: all targets against the one reference
         warped = jax.vmap(lambda tgt: sparw.warp_frame(
             rgb_ref, dep_ref, ref_pose, tgt, self.cam, phi_deg=self.phi_deg)
         )(tgt_poses)
         holes = warped.holes.reshape(n, hw)
         idx, counts = jax.vmap(self._compact_holes)(holes)
-        overflowed = jnp.max(counts) > cap
+        return warped.rgb.reshape(n, hw, 3), holes, idx, counts
 
+    def _sparse_fill(self, params: dict, tgt_poses: jnp.ndarray,
+                     idx: jnp.ndarray, counts: jnp.ndarray) -> jnp.ndarray:
+        """④ sparse NeRF of the disoccluded pixels — one batched render of
+        all N frames' compacted holes, scattered back to [N, HW, 3]."""
+        hw = self.cam.height * self.cam.width
+        cap = self.hole_cap
+        n = tgt_poses.shape[0]
         o_all, d_all = rays.generate_rays_batch(self.cam, tgt_poses)
+        osel = jnp.take_along_axis(o_all, idx[..., None], axis=1)
+        dsel = jnp.take_along_axis(d_all, idx[..., None], axis=1)
+        col, _ = self._render_rays_chunked(
+            params, osel.reshape(-1, 3), dsel.reshape(-1, 3))
+        col = col.reshape(n, cap, 3)
+        valid = jnp.arange(cap)[None, :] < counts[:, None]
 
-        # ④ sparse NeRF of the disoccluded pixels — one batched render of all
-        # N frames' compacted holes ...
-        def sparse_path(_):
-            osel = jnp.take_along_axis(o_all, idx[..., None], axis=1)
-            dsel = jnp.take_along_axis(d_all, idx[..., None], axis=1)
-            col, _ = self._render_rays_chunked(
-                params, osel.reshape(-1, 3), dsel.reshape(-1, 3))
-            col = col.reshape(n, cap, 3)
-            valid = jnp.arange(cap)[None, :] < counts[:, None]
+        def scatter_back(idx_f, col_f, valid_f):
+            buf = jnp.zeros((hw + 1, 3), col_f.dtype).at[
+                jnp.where(valid_f, idx_f, hw)].set(col_f, mode="drop")
+            return buf[:hw]
 
-            def scatter_back(idx_f, col_f, valid_f):
-                buf = jnp.zeros((hw + 1, 3), col_f.dtype).at[
-                    jnp.where(valid_f, idx_f, hw)].set(col_f, mode="drop")
-                return buf[:hw]
+        return jax.vmap(scatter_back)(idx, col, valid)
 
-            return jax.vmap(scatter_back)(idx, col, valid)
+    def _dense_fill(self, params: dict, tgt_poses: jnp.ndarray) -> jnp.ndarray:
+        """Dense re-render of every target frame — the overflow fallback
+        (same output as the sparse path, more work — the RIT-overflow
+        discipline). [N, HW, 3]."""
+        col, _ = jax.lax.map(
+            lambda p: self._render_rays_chunked(
+                params, *rays.generate_rays(self.cam, p)), tgt_poses)
+        return col
 
-        # ... unless some frame overflowed the capacity: dense re-render of
-        # every target (same output, more work — the RIT-overflow discipline)
-        def dense_path(_):
-            col, _ = jax.lax.map(
-                lambda p: self._render_rays_chunked(
-                    params, *rays.generate_rays(self.cam, p)), tgt_poses)
-            return col  # [N, HW, 3]
-
-        sparse_rgb = jax.lax.cond(overflowed, dense_path, sparse_path, None)
-
-        frames = jnp.where(holes[..., None], sparse_rgb,
-                           warped.rgb.reshape(n, hw, 3))
+    def _render_window(self, params: dict, ref_pose: jnp.ndarray,
+                       tgt_poses: jnp.ndarray) -> WindowResult:
+        """The whole warp window — one traced function, no host round-trips."""
+        h, w = self.cam.height, self.cam.width
+        n = tgt_poses.shape[0]
+        warped_rgb, holes, idx, counts = self._warp_and_compact(
+            params, ref_pose, tgt_poses)
+        overflowed = jnp.max(counts) > self.hole_cap
+        fill = jax.lax.cond(
+            overflowed,
+            lambda _: self._dense_fill(params, tgt_poses),
+            lambda _: self._sparse_fill(params, tgt_poses, idx, counts),
+            None)
+        frames = jnp.where(holes[..., None], fill, warped_rgb)
         return WindowResult(frames.reshape(n, h, w, 3),
                             counts.astype(jnp.int32), overflowed)
+
+    def _render_windows(self, params: dict, ref_poses: jnp.ndarray,
+                        tgt_poses: jnp.ndarray) -> BatchedWindowResult:
+        """S concurrent sessions' windows — ONE traced function.
+
+        ``ref_poses`` is [S,4,4] (one reference per session), ``tgt_poses``
+        [S,N,4,4]. Model params — including the streaming backend's MVoxel
+        table — are broadcast (``in_axes=None``): one table serves every
+        session. The overflow fallback is *per session*: a session that
+        exceeds ``hole_cap`` takes its frames from the dense branch while
+        its neighbours keep the sparse-path output bit-for-bit (the dense
+        branch itself is guarded by a single ``lax.cond`` so the
+        no-overflow steady state compiles to the sparse path only).
+        """
+        s, n = tgt_poses.shape[0], tgt_poses.shape[1]
+        h, w = self.cam.height, self.cam.width
+        warped_rgb, holes, idx, counts = jax.vmap(
+            self._warp_and_compact, in_axes=(None, 0, 0))(
+            params, ref_poses, tgt_poses)
+        overflowed = jnp.max(counts, axis=1) > self.hole_cap  # [S]
+        sparse = jax.vmap(self._sparse_fill, in_axes=(None, 0, 0, 0))(
+            params, tgt_poses, idx, counts)
+        dense = jax.lax.cond(
+            jnp.any(overflowed),
+            lambda _: jax.vmap(self._dense_fill, in_axes=(None, 0))(
+                params, tgt_poses),
+            lambda _: jnp.zeros_like(sparse),
+            None)
+        fill = jnp.where(overflowed[:, None, None, None], dense, sparse)
+        frames = jnp.where(holes[..., None], fill, warped_rgb)
+        return BatchedWindowResult(frames.reshape(s, n, h, w, 3),
+                                   counts.astype(jnp.int32), overflowed)
 
     # ------------------------------------------------------------------
     def render_window(self, ref_pose: jnp.ndarray, tgt_poses: jnp.ndarray
@@ -199,6 +276,15 @@ class DeviceSparwEngine:
         single jitted call. ``jax.jit`` re-traces only per distinct N."""
         self.num_window_calls += 1
         return self._window_jit(self.params, ref_pose, tgt_poses)
+
+    def render_windows(self, ref_poses: jnp.ndarray, tgt_poses: jnp.ndarray
+                       ) -> BatchedWindowResult:
+        """Render S sessions' warp windows ([S,4,4] refs vs [S,N,4,4]
+        targets) as a single jitted call — the multi-session serving tick.
+        Re-traces only per distinct (S, N); a fixed-slot serving engine
+        therefore compiles exactly one program for its whole lifetime."""
+        self.num_window_calls += 1
+        return self._windows_jit(self.params, ref_poses, tgt_poses)
 
     def render_trajectory(self, poses: List[jnp.ndarray]
                           ) -> Tuple[List[jnp.ndarray], RenderStats]:
@@ -222,10 +308,5 @@ class DeviceSparwEngine:
             ovf = bool(res.overflowed)
             for j, f in enumerate(idxs):
                 frames_out[f] = res.frames[j]
-                c = int(counts[j])
-                stats.frames += 1
-                stats.total_pixels += hw
-                stats.hole_fractions.append(c / hw)
-                stats.sparse_pixels += hw if ovf else c
-                stats.warped_pixels += hw - c
+                stats.record_frame(int(counts[j]), ovf, hw)
         return [f for f in frames_out if f is not None], stats

@@ -50,6 +50,7 @@ class CiceroRenderer:
             lambda rgb, dep, p_ref, p_tgt: sparw.warp_frame(
                 rgb, dep, p_ref, p_tgt, cam, phi_deg=phi_deg))
         self._device_engine: Optional[DeviceSparwEngine] = None
+        self._serve_engines: Dict[int, object] = {}  # num_slots -> engine
 
     @property
     def device_engine(self) -> DeviceSparwEngine:
@@ -89,6 +90,38 @@ class CiceroRenderer:
         if self.engine == "device" and self.mode == "offtraj":
             return self.device_engine.render_trajectory(poses)
         return self.render_trajectory_host(poses)
+
+    def render_trajectories(self, trajectories: List[List[jnp.ndarray]],
+                            num_slots: Optional[int] = None
+                            ) -> Tuple[List[List[jnp.ndarray]],
+                                       List[RenderStats], Dict[str, object]]:
+        """Multi-session SPARW: serve several client trajectories through
+        ONE batched device program per tick (continuous batching of warp
+        windows — see :mod:`repro.serve.render_engine`).
+
+        Returns (per-session frame lists, per-session stats, serve
+        metrics). Each session's frames bit-match what
+        :meth:`render_trajectory` would produce for it alone.
+        """
+        from repro.serve.render_engine import RenderServeEngine, RenderSession
+
+        if self.mode != "offtraj":
+            raise ValueError("multi-session serving requires mode='offtraj' "
+                             "(TEMP-N is inherently serialized)")
+        slots = num_slots or len(trajectories)
+        # cached per slot count: repeat calls reuse the compiled batch
+        # program (one compile per engine lifetime), mirroring device_engine
+        serve = self._serve_engines.get(slots)
+        if serve is None:
+            serve = self._serve_engines[slots] = RenderServeEngine(
+                self.model, self.params, self.cam, num_slots=slots,
+                window=self.window, phi_deg=self.phi_deg,
+                hole_cap=self.hole_cap)
+        sessions = [RenderSession(sid=i, poses=list(t))
+                    for i, t in enumerate(trajectories)]
+        metrics = serve.run(sessions)
+        return ([list(s.frames) for s in sessions],
+                [s.stats for s in sessions], metrics)
 
     def render_trajectory_host(self, poses: List[jnp.ndarray]
                                ) -> Tuple[List[jnp.ndarray], RenderStats]:
@@ -155,8 +188,12 @@ def trajectory_psnr(frames: List[jnp.ndarray], gt: List[jnp.ndarray]) -> float:
 
 
 def orbit_trajectory(n_frames: int, step_deg: float = 1.0, radius: float = 2.6,
-                     wobble: float = 0.05) -> List[jnp.ndarray]:
+                     wobble: float = 0.05, phase_deg: float = 0.0
+                     ) -> List[jnp.ndarray]:
     """A smooth camera trajectory (consecutive frames in close proximity —
-    the paper's real-time rendering premise, Fig. 7)."""
-    return [rays.orbit_pose(jnp.deg2rad(i * step_deg), radius=radius,
-                            wobble=wobble) for i in range(n_frames)]
+    the paper's real-time rendering premise, Fig. 7). ``phase_deg`` offsets
+    the orbit start so concurrent serving sessions each get a distinct
+    viewpoint stream."""
+    return [rays.orbit_pose(jnp.deg2rad(phase_deg + i * step_deg),
+                            radius=radius, wobble=wobble)
+            for i in range(n_frames)]

@@ -10,6 +10,7 @@ from __future__ import annotations
 from dataclasses import dataclass
 from typing import List, Optional
 
+import jax
 import jax.numpy as jnp
 import numpy as np
 
@@ -52,6 +53,70 @@ def extrapolate_pose(pose_prev: jnp.ndarray, pose_curr: jnp.ndarray,
     return out
 
 
+# One compiled extrapolation shared by every session's schedule state (the
+# serving engine dispatches it once per active slot per tick — jitted, so a
+# steady-state tick stays free of host->device constant transfers).
+extrapolate_pose_jit = jax.jit(extrapolate_pose)
+
+
+@dataclass
+class RefPoseExtrapolator:
+    """Per-session reference-pose extrapolation state (Eq. 5–6, streamed).
+
+    :class:`WarpSchedule` plans reference poses for a trajectory it sees
+    whole; a *serving* engine sees each client's trajectory one warp window
+    at a time. This object carries the two-pose velocity state across
+    windows so a streaming client receives bit-identical reference poses to
+    the batch plan (property-tested): call :meth:`next_reference` with the
+    window's target poses; it returns the window's reference pose and
+    absorbs the window into the velocity state.
+
+    One extrapolator per session — this is the schedule state a
+    multi-session engine keeps per slot.
+    """
+
+    window: int = 16
+    mode: str = "offtraj"
+    pose_prev: Optional[jnp.ndarray] = None  # second-most-recent target pose
+    pose_curr: Optional[jnp.ndarray] = None  # most recent target pose
+    frames_seen: int = 0
+
+    def __post_init__(self) -> None:
+        # staged on device at construction (admit time) so steady-state
+        # serving ticks never transfer the scalar host->device
+        self._steps = jnp.asarray(self.window / 2.0, jnp.float32)
+
+    def observe(self, poses: List[jnp.ndarray]) -> None:
+        """Absorb rendered target poses into the velocity state."""
+        for p in poses:
+            self.pose_prev, self.pose_curr = self.pose_curr, p
+        self.frames_seen += len(poses)
+
+    def next_reference(self, window_poses: List[jnp.ndarray]) -> jnp.ndarray:
+        """Reference pose for the next window given its target poses.
+
+        Matches :meth:`WarpSchedule.windows` exactly: the first window
+        bootstraps with its first target pose; later windows extrapolate
+        from the last two observed poses, ``window/2`` intervals ahead
+        (mid-window). 'temporal' returns the previously observed pose.
+        """
+        if not window_poses:
+            raise ValueError("empty warp window")
+        if self.mode == "offtraj":
+            if self.frames_seen == 0:
+                ref = window_poses[0]
+            else:
+                prev = self.pose_prev if self.pose_prev is not None \
+                    else self.pose_curr
+                ref = extrapolate_pose_jit(prev, self.pose_curr, self._steps)
+        elif self.mode == "temporal":
+            ref = self.pose_curr if self.frames_seen else window_poses[0]
+        else:
+            raise ValueError(self.mode)
+        self.observe(list(window_poses))
+        return ref
+
+
 @dataclass
 class WarpSchedule:
     """Assigns each target frame to a reference frame.
@@ -80,26 +145,14 @@ class WarpSchedule:
         """
         n = len(poses)
         out = []
+        state = RefPoseExtrapolator(window=self.window, mode=self.mode)
         for k in range(0, n, self.window):
-            if self.mode == "offtraj":
-                if k == 0:
-                    ref_pose = poses[0]
-                else:
-                    # velocity at the last *known* pose before the window
-                    ref_pose = extrapolate_pose(
-                        poses[k - 2] if k >= 2 else poses[0],
-                        poses[k - 1],
-                        steps_ahead=self.window / 2.0,
-                    )
-                ref_idx: Optional[int] = None
-            elif self.mode == "temporal":
-                ref_idx = max(k - 1, 0)
-                ref_pose = poses[ref_idx]
-            else:
-                raise ValueError(self.mode)
+            frames = list(range(k, min(k + self.window, n)))
+            ref_pose = state.next_reference([poses[f] for f in frames])
+            ref_idx = max(k - 1, 0) if self.mode == "temporal" else None
             out.append({"window_start": k, "ref_pose": ref_pose,
                         "ref_frame_idx": ref_idx,
-                        "frames": list(range(k, min(k + self.window, n)))})
+                        "frames": frames})
         return out
 
     def plan(self, poses: List[jnp.ndarray]) -> List[dict]:

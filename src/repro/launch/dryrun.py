@@ -272,7 +272,7 @@ def run_cell(arch: str, shape_name: str, mesh_name: str,
           f"MFU={d['mfu']*100:.1f}%")
     print("  memory_analysis:", mem)
     print("  cost_analysis keys:", {k: v for k, v in
-                                    compiled.cost_analysis().items()
+                                    analysis.cost_analysis_dict(compiled).items()
                                     if k in ("flops", "bytes accessed")})
 
     if out_path:

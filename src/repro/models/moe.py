@@ -22,7 +22,9 @@ import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
 from repro.configs.base import ModelConfig
+from repro.models import common
 from repro.models.common import DP, TP, ninit, shard
+from repro.utils import shard_map_compat
 
 
 def moe_init(key, cfg: ModelConfig, dtype) -> dict:
@@ -114,7 +116,7 @@ def _dispatch_combine(x, idx, gate, cfg, slot_of_pair, keep, params):
             jnp.float32)
         return out.reshape(-1, s, k, d).sum(2)
 
-    mesh = jax.sharding.get_abstract_mesh()
+    mesh = common.current_abstract_mesh()
     sizes = dict(zip(mesh.axis_names, mesh.axis_sizes)) if not mesh.empty \
         else {}
     tp = sizes.get("model", 1)
@@ -147,7 +149,7 @@ def _dispatch_combine(x, idx, gate, cfg, slot_of_pair, keep, params):
                                   gate_l, e_loc)
             return jax.lax.psum(part.astype(x_l.dtype), "model")
 
-        out = jax.shard_map(
+        out = shard_map_compat(
             local_moe, mesh=mesh,
             in_specs=(P(dp, None, None), P(dp, None), P(dp, None),
                       P(dp, None), P(dp, None),

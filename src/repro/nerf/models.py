@@ -94,6 +94,7 @@ class NerfModel:
         self.cfg = cfg
         self.scene = scene
         self._render_rays_jit: Optional[callable] = None
+        self._render_rays_batch_jit: Optional[callable] = None
         # (feature table, its prebuilt MVoxel halo table) — the key is held
         # so an `is` hit can never alias a recycled object
         self._mv_table_cache: Optional[tuple] = None
@@ -211,6 +212,22 @@ class NerfModel:
             self._render_rays_jit = jax.jit(self.render_rays)
         return self._render_rays_jit
 
+    def render_rays_batch(self, params: dict, origins: jnp.ndarray,
+                          dirs: jnp.ndarray
+                          ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+        """Session-batched rendering: [S,R,3] rays -> ([S,R,3], [S,R]).
+
+        One shared ``params`` (broadcast) serves every session row — the
+        multi-session engine's entry point into the NeRF."""
+        return jax.vmap(self.render_rays, in_axes=(None, 0, 0))(
+            params, origins, dirs)
+
+    @property
+    def render_rays_batch_jit(self):
+        if self._render_rays_batch_jit is None:
+            self._render_rays_batch_jit = jax.jit(self.render_rays_batch)
+        return self._render_rays_batch_jit
+
     def render_image(self, params: dict, cam: rays.Camera, c2w: jnp.ndarray,
                      chunk: int = 1 << 14) -> Tuple[jnp.ndarray, jnp.ndarray]:
         """Full-frame render (chunked over rays to bound memory)."""
@@ -224,6 +241,26 @@ class NerfModel:
             depths.append(dep)
         color = jnp.concatenate(colors).reshape(cam.height, cam.width, 3)
         depth = jnp.concatenate(depths).reshape(cam.height, cam.width)
+        return color, depth
+
+    def render_image_batch(self, params: dict, cam: rays.Camera,
+                           c2ws: jnp.ndarray, chunk: int = 1 << 14
+                           ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+        """Full-frame renders for a pose batch [S,4,4] ->
+        ([S,H,W,3], [S,H,W]), chunked over rays with the session axis kept
+        on-device (one dispatch per chunk regardless of S)."""
+        o, d = rays.generate_rays_batch(cam, c2ws)  # [S,HW,3]
+        s, n = o.shape[0], o.shape[1]
+        render = self.render_rays_batch_jit
+        colors, depths = [], []
+        for i in range(0, n, chunk):
+            col, dep = render(params, o[:, i:i + chunk], d[:, i:i + chunk])
+            colors.append(col)
+            depths.append(dep)
+        color = jnp.concatenate(colors, axis=1).reshape(
+            s, cam.height, cam.width, 3)
+        depth = jnp.concatenate(depths, axis=1).reshape(
+            s, cam.height, cam.width)
         return color, depth
 
 

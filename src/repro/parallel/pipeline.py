@@ -22,6 +22,8 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
+from repro.utils import shard_map_compat
+
 PyTree = Any
 
 
@@ -85,7 +87,7 @@ def pipelined_forward(layer_fn: Callable, params_stacked: PyTree,
         return outs.reshape(b, *x_all.shape[1:])
 
     other_axes = tuple(a for a in mesh.axis_names if a != axis)
-    fn = jax.shard_map(
+    fn = shard_map_compat(
         pipeline, mesh=mesh,
         in_specs=(P(axis), P()),  # layers over pods; batch replicated
         out_specs=P(),

@@ -196,6 +196,15 @@ def model_flops(cfg, shape) -> float:
     return mult * n * toks
 
 
+def cost_analysis_dict(compiled) -> dict:
+    """``compiled.cost_analysis()`` as a dict across jax versions (0.4.x
+    returns a one-element list of dicts, newer jax the dict itself)."""
+    cost = compiled.cost_analysis()
+    if isinstance(cost, (list, tuple)):
+        cost = cost[0] if cost else {}
+    return cost
+
+
 def from_compiled(arch: str, shape_name: str, mesh_name: str, num_devices: int,
                   compiled, model_flops_global: float = 0.0,
                   notes: str = "") -> RooflineReport:
@@ -204,7 +213,7 @@ def from_compiled(arch: str, shape_name: str, mesh_name: str, num_devices: int,
     under-reported ~num_layers×); raw values kept in notes for reference."""
     from repro.roofline import hlo_cost
 
-    cost = compiled.cost_analysis()
+    cost = cost_analysis_dict(compiled)
     walk = hlo_cost.analyze(compiled.as_text())
     mem = None
     try:

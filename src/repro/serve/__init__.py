@@ -1,0 +1,8 @@
+"""Serving engines: LM continuous batching (:mod:`repro.serve.engine`) and
+the multi-session SpaRW render serving engine
+(:mod:`repro.serve.render_engine`)."""
+from repro.serve.engine import Request, ServeEngine  # noqa: F401
+from repro.serve.render_engine import (  # noqa: F401
+    RenderServeEngine,
+    RenderSession,
+)

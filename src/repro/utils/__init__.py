@@ -37,9 +37,12 @@ def psnr(img: jnp.ndarray, ref: jnp.ndarray, data_range: float = 1.0) -> jnp.nda
 
 
 def fold_rng(key: jax.Array, *names: str) -> jax.Array:
-    """Deterministically derive a sub-key from string names."""
+    """Deterministically derive a sub-key from string names (stable across
+    processes — str hash() is randomized by PYTHONHASHSEED)."""
+    import zlib
+
     for name in names:
-        key = jax.random.fold_in(key, abs(hash(name)) % (2**31))
+        key = jax.random.fold_in(key, zlib.crc32(name.encode("utf-8")))
     return key
 
 
@@ -74,6 +77,27 @@ def human_count(n: float) -> str:
 def chunked(seq, size):
     for i in range(0, len(seq), size):
         yield seq[i : i + size]
+
+
+def shard_map_compat(fn: Callable, *, mesh, in_specs, out_specs,
+                     axis_names=None, check_vma: bool = False) -> Callable:
+    """``jax.shard_map`` across jax versions.
+
+    jax >= 0.6 exposes ``jax.shard_map(..., axis_names=..., check_vma=...)``;
+    0.4.x has ``jax.experimental.shard_map.shard_map(..., auto=...,
+    check_rep=...)``. ``axis_names`` (the manual axes) maps to the old
+    ``auto`` as its complement over the mesh axes."""
+    sm = getattr(jax, "shard_map", None)
+    if sm is not None:
+        kw = {"axis_names": axis_names} if axis_names is not None else {}
+        return sm(fn, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+                  check_vma=check_vma, **kw)
+    from jax.experimental.shard_map import shard_map as sm_old
+
+    auto = (frozenset(mesh.axis_names) - frozenset(axis_names)
+            if axis_names is not None else frozenset())
+    return sm_old(fn, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+                  check_rep=check_vma, auto=auto)
 
 
 def jit_with_name(fn: Callable, name: str, **jit_kwargs) -> Callable:

@@ -28,3 +28,21 @@ def test_bench_render_smoke(tmp_path):
     for key in ("wall_s_cold", "wall_s_warm", "fps_warm", "hole_fraction",
                 "mlp_work_fraction"):
         assert key in res["device_engine"]
+
+
+@pytest.mark.slow
+def test_bench_multi_session_smoke():
+    """The multi-session serving bench runs end-to-end in smoke form (the
+    same run scripts/ci.sh drives) inside the 120 s CI budget, with every
+    session at quality parity with its exclusive single-session run."""
+    import time
+
+    from benchmarks.run import bench_multi_session
+
+    t0 = time.time()
+    ms = bench_multi_session(sessions=2, smoke=True)
+    assert time.time() - t0 < 120.0
+    assert ms["sessions"] == 2
+    assert ms["parity"]["min_psnr_batched_vs_single_db"] >= 60.0
+    assert ms["parity"]["max_abs_psnr_delta_vs_single_db"] <= 1e-3
+    assert set(ms["batched"]["per_session_warm"]) == {"0", "1"}

@@ -7,11 +7,80 @@ import pytest
 pytest.importorskip("hypothesis")  # optional dep: skip cleanly when absent
 from hypothesis import given, settings, strategies as st
 
-from repro.core import sparw, streaming
+from repro.core import schedule, sparw, streaming
 from repro.nerf import grids, rays, volrend
 from repro.parallel import compression
 
 _settings = dict(max_examples=15, deadline=None)
+
+
+# ---------------------------------------------------------------------------
+# reference-frame scheduling (core/schedule.py)
+# ---------------------------------------------------------------------------
+
+
+@settings(**_settings)
+@given(seed=st.integers(0, 2**16),
+       angle=st.floats(1e-4, np.pi - 0.2))
+def test_so3_exp_log_roundtrip(seed, angle):
+    """so3_exp(so3_log(R)) ≈ R for random rotations (angle bounded away
+    from π, where the axis-angle chart is singular)."""
+    axis = np.asarray(jax.random.normal(jax.random.key(seed), (3,)))
+    axis = axis / (np.linalg.norm(axis) + 1e-12)
+    r = schedule.so3_exp(jnp.asarray(axis * angle))
+    r2 = schedule.so3_exp(schedule.so3_log(r))
+    np.testing.assert_allclose(np.asarray(r2), np.asarray(r), atol=1e-5)
+    # R is a genuine rotation: orthonormal, det +1
+    np.testing.assert_allclose(np.asarray(r @ r.T), np.eye(3), atol=1e-5)
+
+
+@settings(**_settings)
+@given(angle=st.floats(0.0, 1e-7), seed=st.integers(0, 2**16))
+def test_so3_small_angle_branches(angle, seed):
+    """The θ→0 branches: exp of a tiny rotation vector is identity; log of
+    identity is the zero vector (no NaNs from the 1/sin(θ) pole)."""
+    axis = np.asarray(jax.random.normal(jax.random.key(seed), (3,)))
+    axis = axis / (np.linalg.norm(axis) + 1e-12)
+    r = schedule.so3_exp(jnp.asarray(axis * angle))
+    np.testing.assert_allclose(np.asarray(r), np.eye(3), atol=1e-6)
+    w = schedule.so3_log(jnp.eye(3))
+    np.testing.assert_allclose(np.asarray(w), 0.0, atol=1e-9)
+    assert np.isfinite(np.asarray(w)).all()
+
+
+@settings(**_settings)
+@given(seed=st.integers(0, 2**16), steps=st.floats(0.0, 32.0))
+def test_extrapolate_stationary_pose_is_fixed_point(seed, steps):
+    """A camera that has not moved predicts itself: extrapolate_pose(p, p,
+    k) == p for any horizon k (zero velocity, identity delta-rotation —
+    exercising the small-angle branches through the Eq. 5–6 path)."""
+    t = float(seed % 628) / 100.0
+    p = rays.orbit_pose(jnp.asarray(t), wobble=0.05)
+    out = schedule.extrapolate_pose(p, p, steps)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(p), atol=1e-5)
+    assert np.isfinite(np.asarray(out)).all()
+
+
+@settings(**_settings)
+@given(seed=st.integers(0, 2**16), n=st.integers(1, 12),
+       window=st.integers(1, 5))
+def test_ref_extrapolator_matches_eq56_plan(seed, n, window):
+    """The streamed per-session schedule state reproduces the Eq. 5–6 batch
+    plan: window k>0 extrapolates from the last two *observed* poses,
+    window/2 intervals ahead; window 0 bootstraps with its first target."""
+    poses = [rays.orbit_pose(jnp.asarray(0.1 * i + seed % 7), wobble=0.02)
+             for i in range(n)]
+    got = [w["ref_pose"] for w in
+           schedule.WarpSchedule(window, "offtraj").windows(poses)]
+    for i, k in enumerate(range(0, n, window)):
+        if k == 0:
+            want = poses[0]
+        else:
+            want = schedule.extrapolate_pose(
+                poses[k - 2] if k >= 2 else poses[0], poses[k - 1],
+                steps_ahead=window / 2.0)
+        np.testing.assert_allclose(np.asarray(got[i]), np.asarray(want),
+                                   atol=1e-6)
 
 
 @settings(**_settings)

@@ -1,0 +1,190 @@
+"""Multi-session SpaRW serving engine: batched-vs-sequential parity, ragged
+session lifetimes (slot reuse), per-session overflow isolation, and the
+zero-host-sync-per-tick contract."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import pipeline
+from repro.nerf import models, rays, scenes
+from repro.serve.render_engine import RenderServeEngine, RenderSession
+from repro.utils import psnr
+
+
+@pytest.fixture(scope="module")
+def small_model(scene):
+    model, _ = models.make_model("dvgo", grid_res=32, channels=4,
+                                 decoder="direct", num_samples=16)
+    return model, model.init_baked(scene)
+
+
+@pytest.fixture(scope="module")
+def cam():
+    return rays.Camera.square(32)
+
+
+def _trajs(n_sessions, n_frames, step_deg=1.0):
+    return [pipeline.orbit_trajectory(n_frames, step_deg=step_deg,
+                                      phase_deg=25.0 * i)
+            for i in range(n_sessions)]
+
+
+def _single_session_frames(model, params, cam, traj, window, hole_cap=None):
+    r = pipeline.CiceroRenderer(model, params, cam, window=window,
+                                engine="device", hole_cap=hole_cap)
+    return r.render_trajectory(traj)
+
+
+def test_model_batched_entry_points_match_per_session(small_model, cam):
+    """render_rays_batch / render_image_batch: the leading session axis is
+    exactly a vmap — each row matches the unbatched render of that pose."""
+    model, params = small_model
+    c2ws = jnp.stack(pipeline.orbit_trajectory(3, step_deg=40.0))
+    col_b, dep_b = model.render_image_batch(params, cam, c2ws, chunk=256)
+    assert col_b.shape == (3, cam.height, cam.width, 3)
+    for i in range(3):
+        col, dep = model.render_image(params, cam, c2ws[i])
+        np.testing.assert_allclose(np.asarray(col_b[i]), np.asarray(col),
+                                   atol=1e-5)
+        np.testing.assert_allclose(np.asarray(dep_b[i]), np.asarray(dep),
+                                   atol=1e-5)
+    # the jitted batch renderer is built once per model
+    assert model.render_rays_batch_jit is model.render_rays_batch_jit
+
+
+def test_streamed_schedule_state_matches_batch_plan():
+    """RefPoseExtrapolator fed window-by-window (the serving engine's view)
+    emits bit-identical reference poses to WarpSchedule.windows on the
+    whole trajectory (the planner's view), including a ragged tail."""
+    from repro.core import schedule
+
+    poses = pipeline.orbit_trajectory(11, step_deg=2.0, wobble=0.05)
+    for window in (1, 2, 4):
+        plan_refs = [w["ref_pose"] for w in
+                     schedule.WarpSchedule(window, "offtraj").windows(poses)]
+        state = schedule.RefPoseExtrapolator(window=window)
+        for i, k in enumerate(range(0, len(poses), window)):
+            ref = state.next_reference(poses[k:k + window])
+            np.testing.assert_array_equal(np.asarray(ref),
+                                          np.asarray(plan_refs[i]))
+
+
+def test_batched_matches_sequential_single_session(small_model, cam):
+    """Every session of a batched run receives exactly the frames (and
+    work statistics) an exclusive single-session engine would produce."""
+    model, params = small_model
+    trajs = _trajs(3, 5)
+    renderer = pipeline.CiceroRenderer(model, params, cam, window=2)
+    frames_b, stats_b, metrics = renderer.render_trajectories(trajs)
+    assert metrics["total_frames"] == 15
+    assert metrics["ticks"] == 3  # ceil(5/2) windows, all sessions in step
+    for i, traj in enumerate(trajs):
+        fs, ss = _single_session_frames(model, params, cam, traj, window=2)
+        assert len(frames_b[i]) == len(fs)
+        for a, b in zip(fs, frames_b[i]):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+        assert stats_b[i].frames == ss.frames
+        assert stats_b[i].sparse_pixels == ss.sparse_pixels
+        np.testing.assert_allclose(stats_b[i].hole_fractions,
+                                   ss.hole_fractions, atol=1e-9)
+
+
+def test_ragged_session_lifetimes_and_slot_reuse(small_model, cam):
+    """Sessions of different lengths join and leave mid-run; a freed slot
+    is reused by the next queued session; everyone still gets parity."""
+    model, params = small_model
+    lengths = [5, 2, 7, 3]
+    trajs = [pipeline.orbit_trajectory(n, step_deg=1.0, phase_deg=20.0 * i)
+             for i, n in enumerate(lengths)]
+    serve = RenderServeEngine(model, params, cam, num_slots=2, window=2)
+    sessions = [RenderSession(sid=i, poses=list(t))
+                for i, t in enumerate(trajs)]
+    metrics = serve.run(sessions)
+    assert all(s.done for s in sessions)
+    # 2 slots over 4 sessions: the engine must have queued + reused slots
+    assert metrics["ticks"] > max((n + 1) // 2 for n in lengths)
+    for sess, traj in zip(sessions, trajs):
+        assert all(f is not None for f in sess.frames)
+        fs, _ = _single_session_frames(model, params, cam, traj, window=2)
+        for a, b in zip(fs, sess.frames):
+            assert float(psnr(a, b)) >= 60.0
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_overflow_isolation_between_sessions(small_model, cam):
+    """One session overflowing hole_cap (dense fallback) must not perturb
+    its neighbour: the quiet session's frames stay bit-identical to its
+    exclusive run and its stats never report dense work."""
+    model, params = small_model
+    hot = pipeline.orbit_trajectory(4, step_deg=25.0)  # violent motion
+    quiet = pipeline.orbit_trajectory(4, step_deg=0.05, phase_deg=180.0)
+    hw = cam.height * cam.width
+
+    # pick a cap between the two sessions' hole regimes
+    _, s_hot = _single_session_frames(model, params, cam, hot, window=2)
+    _, s_quiet = _single_session_frames(model, params, cam, quiet, window=2)
+    hot_max = int(max(s_hot.hole_fractions) * hw)
+    quiet_max = int(max(s_quiet.hole_fractions) * hw)
+    assert quiet_max < hot_max, "fixture trajectories must differ in motion"
+    cap = max(quiet_max + 8, (quiet_max + hot_max) // 2)
+    assert cap < hot_max
+
+    serve = RenderServeEngine(model, params, cam, num_slots=2, window=2,
+                              hole_cap=cap)
+    sessions = [RenderSession(sid=0, poses=list(hot)),
+                RenderSession(sid=1, poses=list(quiet))]
+    serve.run(sessions)
+    # hot session fell back to dense at least once
+    assert sessions[0].stats.sparse_pixels > sum(
+        int(f * hw) for f in sessions[0].stats.hole_fractions)
+    # quiet session: sparse path only, stats record true hole counts
+    assert sessions[1].stats.sparse_pixels == sum(
+        int(f * hw) for f in sessions[1].stats.hole_fractions)
+    # ... and bit-identical frames to its exclusive run at the same cap
+    fq, _ = _single_session_frames(model, params, cam, quiet, window=2,
+                                   hole_cap=cap)
+    for a, b in zip(fq, sessions[1].frames):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    # the hot session still gets correct frames (dense fallback output)
+    fh, _ = _single_session_frames(model, params, cam, hot, window=2,
+                                   hole_cap=cap)
+    for a, b in zip(fh, sessions[0].frames):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_tick_has_zero_host_syncs(small_model, cam):
+    """A serving tick is dispatch-only: after warm-up, `step()` runs under
+    ``jax.transfer_guard('disallow')`` — any device→host sync inside the
+    tick would raise. Frames/stats materialize only in `finalize()`."""
+    model, params = small_model
+    trajs = _trajs(2, 6)
+    serve = RenderServeEngine(model, params, cam, num_slots=2, window=2)
+    serve.submit([RenderSession(sid=i, poses=list(t))
+                  for i, t in enumerate(trajs)])
+    assert serve.step()  # warm-up tick: trace + compile
+    jax.block_until_ready(serve._last_result.frames)
+    with jax.transfer_guard("disallow"):
+        assert serve.step()  # steady-state tick: pure dispatch
+        jax.block_until_ready(serve._last_result.frames)
+    while serve.step():
+        pass
+    serve.finalize()
+    # one batched device call per tick, materialization deferred to finalize
+    assert serve.engine.num_window_calls == serve.num_ticks
+    assert serve._pending == []
+
+
+def test_single_compile_for_engine_lifetime(small_model, cam):
+    """Fixed slots + pose padding keep the batch shape static: ragged
+    trajectories and idle slots reuse the same compiled program (no
+    per-tick retrace)."""
+    model, params = small_model
+    trajs = [pipeline.orbit_trajectory(n, step_deg=1.0, phase_deg=10.0 * n)
+             for n in (5, 3)]  # ragged + an idle slot at the end
+    serve = RenderServeEngine(model, params, cam, num_slots=3, window=2)
+    sessions = [RenderSession(sid=i, poses=list(t))
+                for i, t in enumerate(trajs)]
+    serve.run(sessions)
+    compiles = serve.engine._windows_jit._cache_size()
+    assert compiles == 1, f"expected 1 compiled batch program, got {compiles}"

@@ -15,6 +15,7 @@ def test_walker_exact_on_scanned_matmul_subprocess():
         import jax, jax.numpy as jnp, numpy as np
         from jax.sharding import PartitionSpec as P, NamedSharding, Mesh
         from repro.roofline import hlo_cost
+        from repro.roofline.analysis import cost_analysis_dict
         mesh = Mesh(np.asarray(jax.devices()).reshape(2, 4), ("data", "model"))
         TRIPS = 5
         def f(x, ws):
@@ -39,7 +40,7 @@ def test_walker_exact_on_scanned_matmul_subprocess():
         assert abs(res["weighted_coll_bytes"] - expect_coll) <= 16, res
         assert res["weighted_coll_bytes_bf16wire"] <= res["weighted_coll_bytes"]
         # XLA's own count misses the trip multiplier (the bug we correct)
-        assert cc.cost_analysis()["flops"] < expect_flops
+        assert cost_analysis_dict(cc)["flops"] < expect_flops
         print("WALKER_OK")
     """
     env = dict(os.environ, PYTHONPATH="src")
