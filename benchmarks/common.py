@@ -127,7 +127,8 @@ def measured_sparw(window: int, step_deg: float = TRACE_STEP_DEG,
 
     scene, model, params = bench_model("dvgo")
     cam = rays.Camera.square(RES)
-    r = pipeline.CiceroRenderer(model, params, cam, window=window)
+    r = pipeline.CiceroRenderer(
+        model, params, config=pipeline.RenderConfig(camera=cam, window=window))
     traj = pipeline.orbit_trajectory(max(window, 8), step_deg=step_deg)
     _, stats = r.render_trajectory(traj)
     tr = costmodel.SparwTrace(window=window,

@@ -121,11 +121,13 @@ def fig16_quality(windows=(6, 16), n_frames: int = 16) -> List[str]:
     scene, model, params = common.bench_model("dvgo")
     cam = rays.Camera.square(common.RES)
     traj = pipeline.orbit_trajectory(n_frames, step_deg=0.5)
-    r0 = pipeline.CiceroRenderer(model, params, cam, window=max(windows))
+    r0 = pipeline.CiceroRenderer(model, params, config=pipeline.RenderConfig(
+        camera=cam, window=max(windows)))
     t0 = time.time()
     base = r0.render_baseline(traj)
     for w in windows:
-        r = pipeline.CiceroRenderer(model, params, cam, window=w)
+        r = pipeline.CiceroRenderer(
+            model, params, config=pipeline.RenderConfig(camera=cam, window=w))
         frames, stats = r.render_trajectory(traj)
         p = np.mean([float(psnr(f, b)) for f, b in zip(frames, base)])
         rows.append(common.csv_row(
@@ -136,8 +138,8 @@ def fig16_quality(windows=(6, 16), n_frames: int = 16) -> List[str]:
     p_ds = np.mean([float(psnr(f, b)) for f, b in zip(ds2, base)])
     rows.append(common.csv_row("fig16_ds2", 0.0,
                                f"psnr_vs_baseline={p_ds:.2f}dB"))
-    tmp = pipeline.CiceroRenderer(model, params, cam, window=16,
-                                  mode="temporal")
+    tmp = pipeline.CiceroRenderer(model, params, config=pipeline.RenderConfig(
+        camera=cam, window=16, mode="temporal"))
     f_tmp, _ = tmp.render_trajectory(traj)
     p_tmp = np.mean([float(psnr(f, b)) for f, b in zip(f_tmp, base)])
     rows.append(common.csv_row("fig16_temp16", 0.0,
@@ -248,7 +250,8 @@ def fig25_26_threshold(phis=(1.0, 2.0, 4.0, 8.0, None)) -> List[str]:
     rows = []
     base = [model.render_image({}, cam, p)[0] for p in traj]
     for phi in phis:
-        r = pipeline.CiceroRenderer(model, {}, cam, window=4, phi_deg=phi)
+        r = pipeline.CiceroRenderer(model, {}, config=pipeline.RenderConfig(
+            camera=cam, window=4, phi_deg=phi))
         frames, stats = r.render_trajectory(traj)
         p = np.mean([float(psnr(f, b)) for f, b in zip(frames, base)])
         warp_ratio = 1.0 - stats.mean_hole_fraction

@@ -33,55 +33,38 @@ if str(ROOT) not in sys.path:  # allow `python benchmarks/run.py` as well as -m
 # ---------------------------------------------------------------------------
 
 
-def _build_model(res: int, *, backend: str = "reference", grid_res: int = 48,
-                 num_samples: int = 32):
-    from repro.nerf import models, rays, scenes
+def _make_config(res: int, window: int, engine: str, *,
+                 backend: str = "reference", grid_res: int = 48,
+                 num_samples: int = 32, hole_cap=None, num_slots: int = 4):
+    from repro.core.config import RenderConfig
 
-    scene = scenes.make_scene("lego")
-    model, _ = models.make_model("dvgo", grid_res=grid_res, channels=4,
-                                 decoder="direct", num_samples=num_samples,
-                                 backend=backend,
-                                 stream_capacity=512)
-    return model, model.init_baked(scene), rays.Camera.square(res)
-
-
-def _build_renderer(res: int, window: int, engine: str, *,
-                    backend: str = "reference", grid_res: int = 48,
-                    num_samples: int = 32, hole_cap=None):
-    from repro.core import pipeline
-
-    model, params, cam = _build_model(res, backend=backend,
-                                      grid_res=grid_res,
-                                      num_samples=num_samples)
-    return pipeline.CiceroRenderer(model, params, cam, window=window,
-                                   engine=engine, hole_cap=hole_cap)
-
-
-def _time_trajectory(renderer, traj):
-    import jax
-
-    t0 = time.time()
-    frames, stats = renderer.render_trajectory(traj)
-    jax.block_until_ready(frames)
-    return time.time() - t0, frames, stats
+    return RenderConfig(scene="lego", res=res, window=window, engine=engine,
+                        backend=backend, grid_res=grid_res,
+                        num_samples=num_samples, hole_cap=hole_cap,
+                        num_slots=num_slots, channels=4, decoder="direct",
+                        stream_capacity=512).resolved()
 
 
 def _run_variant(renderer, traj, reps: int = 3):
     """Cold pass (includes compiles — the real end-to-end cost of a fresh
     renderer) + warm pass (steady-state execution)."""
-    cold_s, frames, stats = _time_trajectory(renderer, traj)
-    warm_s = min(_time_trajectory(renderer, traj)[0] for _ in range(reps))
+    from repro.core.config import RenderRequest
+
+    req = RenderRequest(poses=tuple(traj))
+    cold = renderer.render(req)
+    warm = min((renderer.render(req) for _ in range(reps)),
+               key=lambda r: r.wall_s)
     n = len(traj)
     return {
-        "wall_s_cold": cold_s,
-        "wall_s_warm": warm_s,
-        "s_per_frame_cold": cold_s / n,
-        "s_per_frame_warm": warm_s / n,
-        "fps_warm": n / warm_s,
-        "hole_fraction": stats.mean_hole_fraction,
-        "mlp_work_fraction": stats.mlp_work_fraction,
-        "reference_renders": stats.reference_renders,
-    }, frames
+        "wall_s_cold": cold.wall_s,
+        "wall_s_warm": warm.wall_s,
+        "s_per_frame_cold": cold.wall_s / n,
+        "s_per_frame_warm": warm.wall_s / n,
+        "fps_warm": warm.fps,
+        "hole_fraction": cold.stats.mean_hole_fraction,
+        "mlp_work_fraction": cold.stats.mlp_work_fraction,
+        "reference_renders": cold.stats.reference_renders,
+    }, list(cold.frames)
 
 
 def bench_render(frames: int = 32, res: int = 64, window: int = 4,
@@ -97,6 +80,7 @@ def bench_render(frames: int = 32, res: int = 64, window: int = 4,
     """
     import numpy as np
 
+    from repro import api
     from repro.core import pipeline
     from repro.utils import psnr
 
@@ -110,12 +94,14 @@ def bench_render(frames: int = 32, res: int = 64, window: int = 4,
     # falls back to dense renders if a window ever exceeds it
     hole_cap = max(hw // 8, 128)
 
-    host = _build_renderer(res, window, "host", grid_res=grid_res,
-                           num_samples=num_samples)
+    host_cfg = _make_config(res, window, "host", grid_res=grid_res,
+                            num_samples=num_samples)
+    host = api.make_renderer(host_cfg)
     host_m, host_frames = _run_variant(host, traj)
 
-    dev = _build_renderer(res, window, "device", grid_res=grid_res,
-                          num_samples=num_samples, hole_cap=hole_cap)
+    dev_cfg = _make_config(res, window, "device", grid_res=grid_res,
+                           num_samples=num_samples, hole_cap=hole_cap)
+    dev = api.make_renderer(dev_cfg)
     dev_m, dev_frames = _run_variant(dev, traj)
 
     pair_psnr = [float(psnr(a, b)) for a, b in zip(host_frames, dev_frames)]
@@ -129,7 +115,11 @@ def bench_render(frames: int = 32, res: int = 64, window: int = 4,
     result = {
         "config": {"frames": frames, "res": res, "window": window,
                    "grid_res": grid_res, "num_samples": num_samples,
-                   "hole_cap": hole_cap, "smoke": smoke},
+                   "hole_cap": hole_cap, "smoke": smoke,
+                   # the active RenderConfig (device arm — the headline
+                   # engine) as a stable digest: perf numbers are traceable
+                   # to the exact compile surface that produced them
+                   "config_fingerprint": dev_cfg.fingerprint()},
         "host_loop": host_m,
         "device_engine": dev_m,
         "speedup": host_m["wall_s_cold"] / dev_m["wall_s_cold"],
@@ -142,9 +132,10 @@ def bench_render(frames: int = 32, res: int = 64, window: int = 4,
 
     if smoke:
         # smoke also proves the Pallas streaming backend end-to-end
-        stream = _build_renderer(res, window, "device", backend="streaming",
-                                 grid_res=grid_res, num_samples=num_samples,
-                                 hole_cap=hole_cap)
+        stream = api.make_renderer(
+            _make_config(res, window, "device", backend="streaming",
+                         grid_res=grid_res, num_samples=num_samples,
+                         hole_cap=hole_cap))
         stream_m, stream_frames = _run_variant(stream, traj)
         s_psnr = [float(psnr(a, b)) for a, b in zip(host_frames, stream_frames)]
         result["device_engine_streaming"] = stream_m
@@ -189,8 +180,9 @@ def bench_multi_session(sessions: int = 4, frames: int = 32, res: int = 64,
     import jax
     import numpy as np
 
+    from repro import api
     from repro.core import pipeline
-    from repro.serve.render_engine import RenderServeEngine, RenderSession
+    from repro.core.config import RenderRequest
     from repro.utils import psnr
 
     if smoke:
@@ -201,27 +193,28 @@ def bench_multi_session(sessions: int = 4, frames: int = 32, res: int = 64,
     trajs = [pipeline.orbit_trajectory(frames, step_deg=1.0,
                                        phase_deg=30.0 * i)
              for i in range(sessions)]
+    cfg = _make_config(res, window, "device", grid_res=grid_res,
+                       num_samples=num_samples, hole_cap=hole_cap,
+                       num_slots=sessions)
 
-    # ONE (model, params, cam) shared by every arm: the batched-vs-single
-    # parity comparison is then over identical parameters by construction
-    # (not via scene-seed determinism), and the scene isn't re-baked 6×
-    model, params, cam = _build_model(res, grid_res=grid_res,
-                                      num_samples=num_samples)
+    # ONE (model, params) shared by every arm: the batched-vs-single parity
+    # comparison is then over identical parameters by construction (not via
+    # scene-seed determinism), and the scene isn't re-baked 6×
+    shared = api.make_renderer(cfg)
 
     # --- sequential: one single-session device engine per client ---------
     # (cold pass = each client's engine compiles its own window program;
     # warm pass = steady state, same engines re-driven)
-    seq_renderers = [
-        pipeline.CiceroRenderer(model, params, cam, window=window,
-                                engine="device", hole_cap=hole_cap)
-        for _ in range(sessions)]
+    seq_renderers = [api.make_renderer(cfg, model=shared.model,
+                                       params=shared.params)
+                     for _ in range(sessions)]
+    requests = [RenderRequest(poses=tuple(t), sid=i)
+                for i, t in enumerate(trajs)]
 
     def run_sequential():
         t0 = _time.time()
-        out = []
-        for r, traj in zip(seq_renderers, trajs):
-            fs, _ = r.render_trajectory(traj)
-            out.append(fs)
+        out = [list(r.render(req).frames)
+               for r, req in zip(seq_renderers, requests)]
         jax.block_until_ready([f for fs in out for f in fs])
         return _time.time() - t0, out
 
@@ -229,31 +222,23 @@ def bench_multi_session(sessions: int = 4, frames: int = 32, res: int = 64,
     seq_warm_s, _ = run_sequential()
 
     # --- batched: ONE serving engine, one device call per tick -----------
-    def make_serve():
-        return RenderServeEngine(model, params, cam,
-                                 num_slots=sessions, window=window,
-                                 hole_cap=hole_cap)
-
-    def run_batched(serve):
-        sess = [RenderSession(sid=i, poses=list(t))
-                for i, t in enumerate(trajs)]
+    # (the serve engine is cached per config on `shared`, so the second
+    # call re-drives the same compiled engine — the warm measurement)
+    def run_batched():
         t0 = _time.time()
-        metrics = serve.run(sess)
+        results, metrics = shared.serve(requests, policy="fifo")
         wall = _time.time() - t0
-        return wall, sess, metrics
+        return wall, results, metrics
 
-    serve = make_serve()
-    bat_cold_s, bat_sessions, bat_metrics = run_batched(serve)
-    bat_warm_s, _, bat_warm_metrics = run_batched(serve)
+    bat_cold_s, bat_results, bat_metrics = run_batched()
+    bat_warm_s, _, bat_warm_metrics = run_batched()
 
     # --- parity: per-session vs the exclusive single-session engine ------
     total = sessions * frames
     pair_psnr, psnr_delta = [], 0.0
-    base_renderer = pipeline.CiceroRenderer(model, params, cam,
-                                            window=window, engine="device")
     for i in range(sessions):
-        base = base_renderer.render_baseline(trajs[i])
-        for sf, bf, gt in zip(seq_frames[i], bat_sessions[i].frames, base):
+        base = shared.render_baseline(trajs[i])
+        for sf, bf, gt in zip(seq_frames[i], bat_results[i].frames, base):
             pair_psnr.append(float(psnr(sf, bf)))
             psnr_delta = max(psnr_delta, abs(float(psnr(bf, gt)) -
                                              float(psnr(sf, gt))))
@@ -262,6 +247,8 @@ def bench_multi_session(sessions: int = 4, frames: int = 32, res: int = 64,
         "sessions": sessions,
         "frames_per_session": frames,
         "window": window,
+        "policy": bat_metrics["policy"],
+        "config_fingerprint": cfg.fingerprint(),
         "sequential": {
             "wall_s_cold": seq_cold_s,
             "wall_s_warm": seq_warm_s,

@@ -1,7 +1,9 @@
-"""Quickstart: the paper's pipeline in ~60 lines.
+"""Quickstart: the paper's pipeline through the unified API, in ~60 lines.
 
-1. Build a procedural scene + baked DVGO-style NeRF.
-2. Render a short trajectory with SPARW (reference warp + sparse NeRF).
+1. Declare a :class:`RenderConfig` and build a renderer (procedural scene +
+   baked DVGO-style NeRF) with ``repro.api.make_renderer``.
+2. Render a short trajectory with SPARW (reference warp + sparse NeRF) via
+   a :class:`RenderRequest`.
 3. Compare PSNR + saved MLP work vs full-frame rendering.
 4. Run the streaming (memory-centric) gather and the Pallas GU kernel.
 
@@ -11,43 +13,47 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import api
 from repro.core import pipeline, streaming
+from repro.core.config import RenderConfig, RenderRequest
 from repro.kernels import ops
-from repro.nerf import grids, models, rays, scenes
+from repro.nerf import grids
 from repro.utils import psnr
 
 
 def main():
-    print("== scene + baked model ==")
-    scene = scenes.make_scene("lego")
-    model, _ = models.make_model("dvgo", grid_res=48, channels=4,
-                                 decoder="direct", num_samples=32)
-    params = model.init_baked(scene)
-    cam = rays.Camera.square(64)
+    print("== declarative config + renderer ==")
+    cfg = RenderConfig(scene="lego", res=64, window=6,
+                       grid_res=48, channels=4, decoder="direct",
+                       num_samples=32)
+    r = api.make_renderer(cfg)
+    print(f"  RenderConfig fingerprint    : {cfg.fingerprint()}")
 
     print("== SPARW trajectory render (window=6) ==")
     traj = pipeline.orbit_trajectory(6, step_deg=1.0)
-    r = pipeline.CiceroRenderer(model, params, cam, window=6)
-    frames, stats = r.render_trajectory(traj)
+    result = r.render(RenderRequest(poses=tuple(traj)))
     base = r.render_baseline(traj)
-    vals = [float(psnr(f, b)) for f, b in zip(frames, base)]
+    vals = [float(psnr(f, b)) for f, b in zip(result.frames, base)]
     print(f"  PSNR vs full-frame baseline : {np.mean(vals):.2f} dB")
-    print(f"  disoccluded (sparse) pixels : {stats.mean_hole_fraction*100:.1f}%")
-    print(f"  MLP work vs baseline        : {stats.mlp_work_fraction*100:.1f}%"
+    print(f"  disoccluded (sparse) pixels : "
+          f"{result.stats.mean_hole_fraction*100:.1f}%")
+    print(f"  MLP work vs baseline        : "
+          f"{result.stats.mlp_work_fraction*100:.1f}%"
           f"  (paper: ~12% at window 16)")
 
     print("== memory-centric streaming gather ==")
+    params = r.params
     pts = jax.random.uniform(jax.random.key(0), (5000, 3), minval=-1,
                              maxval=1)
-    cfg = streaming.StreamingCfg(grid_res=48, mvoxel_edge=8, capacity=256)
-    feats, order = streaming.streaming_gather(params["table"], pts, cfg)
+    scfg = streaming.StreamingCfg(grid_res=48, mvoxel_edge=8, capacity=256)
+    feats, order = streaming.streaming_gather(params["table"], pts, scfg)
     ids, w = grids.corner_ids_weights(pts, 48)
     ref = grids.gather_trilerp_ref(params["table"], ids, w)
     print(f"  streaming == pixel-centric  : "
           f"max|Δ| = {float(jnp.abs(feats-ref).max()):.1e}")
 
     print("== Pallas GU kernel (channel-major, interpret mode) ==")
-    got = ops.gather_features_streaming(params["table"], pts, cfg)
+    got = ops.gather_features_streaming(params["table"], pts, scfg)
     print(f"  kernel == oracle            : "
           f"max|Δ| = {float(jnp.abs(got-ref).max()):.1e}")
     print("done.")

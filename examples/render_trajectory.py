@@ -1,4 +1,5 @@
-"""Render a camera trajectory with SPARW and compare every paper variant.
+"""Render a camera trajectory with SPARW and compare every paper variant,
+through the unified ``repro.api`` facade.
 
   PYTHONPATH=src python examples/render_trajectory.py [--frames 12]
       [--window 6] [--res 64] [--phi 4.0] [--engine device|host]
@@ -7,16 +8,16 @@
 Outputs per-variant PSNR vs the full-frame baseline + measured work savings,
 and optionally saves the rendered frames. ``--engine device`` (default) runs
 each warp window as one jitted device program; ``--engine host`` uses the
-seed per-frame host loop.
+seed per-frame host loop. Every variant is one ``RenderConfig`` away: the
+TEMP-N baseline is simply ``cfg.replace(mode="temporal")``.
 """
 import argparse
-import time
 
-import jax.numpy as jnp
 import numpy as np
 
+from repro import api
 from repro.core import pipeline
-from repro.nerf import models, rays, scenes
+from repro.core.config import RenderConfig, RenderRequest
 from repro.utils import psnr
 
 
@@ -31,42 +32,39 @@ def main():
     ap.add_argument("--save", default=None)
     args = ap.parse_args()
 
-    scene = scenes.make_scene(args.scene)
-    model, _ = models.make_model("dvgo", grid_res=64, channels=4,
-                                 decoder="direct", num_samples=48)
-    params = model.init_baked(scene)
-    cam = rays.Camera.square(args.res)
+    cfg = RenderConfig(scene=args.scene, res=args.res, window=args.window,
+                       phi_deg=args.phi, engine=args.engine,
+                       grid_res=64, channels=4, decoder="direct",
+                       num_samples=48)
+    r = api.make_renderer(cfg)
     traj = pipeline.orbit_trajectory(args.frames, step_deg=1.0)
 
-    r = pipeline.CiceroRenderer(model, params, cam, window=args.window,
-                                phi_deg=args.phi, engine=args.engine)
     print(f"full-frame baseline ({args.frames} frames)...")
     base = r.render_baseline(traj)
 
     print(f"SPARW window={args.window} phi={args.phi} engine={args.engine}...")
-    t0 = time.time()
-    frames, stats = r.render_trajectory(traj)
-    wall = time.time() - t0
-    p = np.mean([float(psnr(f, b)) for f, b in zip(frames, base)])
+    result = r.render(RenderRequest(poses=tuple(traj)))
+    p = np.mean([float(psnr(f, b)) for f, b in zip(result.frames, base)])
     print(f"  CICERO-{args.window}: {p:.2f} dB | "
-          f"holes {stats.mean_hole_fraction*100:.1f}% | "
-          f"MLP work {stats.mlp_work_fraction*100:.1f}% of baseline | "
-          f"{len(frames)/wall:.1f} fps incl. compile")
+          f"holes {result.stats.mean_hole_fraction*100:.1f}% | "
+          f"MLP work {result.stats.mlp_work_fraction*100:.1f}% of baseline | "
+          f"{result.fps:.1f} fps incl. compile")
 
     ds2 = r.render_ds2(traj)
     p_ds = np.mean([float(psnr(f, b)) for f, b in zip(ds2, base)])
     print(f"  DS-2     : {p_ds:.2f} dB (renders 25% of pixels, upsamples)")
 
-    tmp = pipeline.CiceroRenderer(model, params, cam, window=args.window,
-                                  mode="temporal")
-    f_tmp, _ = tmp.render_trajectory(traj)
-    p_tmp = np.mean([float(psnr(f, b)) for f, b in zip(f_tmp, base)])
+    tmp = api.make_renderer(cfg.replace(mode="temporal"),
+                            model=r.model, params=r.params)
+    res_tmp = tmp.render(RenderRequest(poses=tuple(traj)))
+    p_tmp = np.mean([float(psnr(f, b))
+                     for f, b in zip(res_tmp.frames, base)])
     print(f"  TEMP-{args.window}   : {p_tmp:.2f} dB (serialized reference — "
           f"accumulates error)")
 
     if args.save:
         np.savez(args.save,
-                 cicero=np.stack([np.asarray(f) for f in frames]),
+                 cicero=np.stack([np.asarray(f) for f in result.frames]),
                  baseline=np.stack([np.asarray(f) for f in base]))
         print(f"saved frames to {args.save}")
 

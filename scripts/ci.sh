@@ -22,6 +22,12 @@ fi
 echo "== tier-1 tests =="
 python -m pytest -x -q ${MARK:+-m "$MARK"}
 
+echo "== quickstart under -W error::DeprecationWarning =="
+# the legacy-kwarg constructors only warn — but no first-party entry point
+# is allowed to *use* them: the example must run clean with the warning
+# promoted to an error (guards the repro.api migration)
+python -W error::DeprecationWarning examples/quickstart.py
+
 echo "== multi-session render smoke (<120 s budget) =="
 start=$(date +%s)
 python benchmarks/run.py --smoke --sessions 2 --out /tmp/BENCH_render_ci.json

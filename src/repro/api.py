@@ -1,0 +1,127 @@
+"""repro.api — the unified SPARW rendering facade.
+
+One declarative surface over the whole stack (config → renderer → serving):
+
+    from repro import api
+    from repro.core.config import RenderConfig, RenderRequest
+
+    cfg = RenderConfig(scene="lego", res=64, window=6)
+    renderer = api.make_renderer(cfg)
+
+    # single session
+    result = renderer.render(RenderRequest(poses=tuple(traj)))
+    result.frames, result.stats.mlp_work_fraction, result.fps
+
+    # many concurrent sessions, ONE batched device program per tick
+    results, metrics = renderer.serve(
+        [RenderRequest(poses=tuple(t), priority=p) for t, p in work],
+        policy="priority")
+
+:class:`~repro.core.config.RenderConfig` carries every compile-relevant
+knob (scene, camera, warp window, hole capacity, backend, engine, slots,
+model shape); it is frozen and hashable, so the renderer caches one
+compiled engine per distinct config — including per-request
+``window``/``hole_cap`` overrides — and can never hand back a stale
+program. ``policy`` selects the serving admission policy
+(:mod:`repro.serve.policies`): FIFO (default, bit-identical to pre-policy
+serving) or priority/deadline-aware admission.
+
+This module is the supported entry point for benchmarks, examples and
+tests; the engine classes underneath (`CiceroRenderer`,
+`DeviceSparwEngine`, `RenderServeEngine`) remain importable for
+engine-level work and accept the same ``config=`` objects.
+"""
+from __future__ import annotations
+
+from typing import Dict, List, Optional, Sequence, Tuple, Union
+
+import jax.numpy as jnp
+
+from repro.core import pipeline
+from repro.core.config import (  # noqa: F401 (facade re-exports)
+    RenderConfig,
+    RenderRequest,
+    RenderResult,
+    RenderStats,
+)
+from repro.nerf import models, scenes
+from repro.serve.policies import (  # noqa: F401 (facade re-exports)
+    FifoPolicy,
+    PriorityPolicy,
+    SchedulingPolicy,
+)
+
+
+class Renderer:
+    """The facade over one (model, params, :class:`RenderConfig`) triple.
+
+    Built by :func:`make_renderer`; exposes exactly the unified API —
+    :meth:`render` for a single session, :meth:`serve` for concurrent
+    sessions with a pluggable admission policy, plus the paper's
+    comparison baselines. The underlying :class:`CiceroRenderer` is
+    available as ``.pipeline`` for engine-level access.
+    """
+
+    def __init__(self, config: RenderConfig, model: models.NerfModel,
+                 params: dict):
+        self.config = config.resolved()
+        self.model = model
+        self.pipeline = pipeline.CiceroRenderer(model, params,
+                                                config=self.config)
+        self.params = self.pipeline.params  # streaming-prepared
+        self.cam = self.config.camera
+
+    # ------------------------------------------------------------------
+    def render(self, request: Union[RenderRequest, Sequence[jnp.ndarray]]
+               ) -> RenderResult:
+        """Render one session (a :class:`RenderRequest`, or a bare pose
+        sequence as shorthand). Per-request ``window``/``hole_cap``
+        overrides compile (once) and render through a variant engine."""
+        if not isinstance(request, RenderRequest):
+            request = RenderRequest(poses=tuple(request))
+        return self.pipeline.render(request)
+
+    def serve(self, requests: Sequence[Union[RenderRequest, Sequence[jnp.ndarray]]],
+              policy: Union[None, str, SchedulingPolicy] = None,
+              num_slots: Optional[int] = None
+              ) -> Tuple[List[RenderResult], Dict[str, object]]:
+        """Serve concurrent sessions through ONE batched device program per
+        tick. ``policy`` picks the admission policy ("fifo" default,
+        "priority", or any :class:`SchedulingPolicy`); ``num_slots``
+        overrides ``config.num_slots`` for this serve. Returns
+        (per-request results, serve metrics)."""
+        return self.pipeline.serve(requests, policy=policy,
+                                   num_slots=num_slots)
+
+    # ------------------------------------------------------------------
+    # paper comparison baselines (full NeRF every frame; DS-2 upsampling)
+    def render_baseline(self, poses: Sequence[jnp.ndarray]) -> List[jnp.ndarray]:
+        return self.pipeline.render_baseline(list(poses))
+
+    def render_ds2(self, poses: Sequence[jnp.ndarray]) -> List[jnp.ndarray]:
+        return self.pipeline.render_ds2(list(poses))
+
+
+def make_renderer(config: RenderConfig, *,
+                  model: Optional[models.NerfModel] = None,
+                  params: Optional[dict] = None) -> Renderer:
+    """Build a :class:`Renderer` for ``config``.
+
+    With no ``model``/``params`` the scene and model are built from the
+    config (procedural scene → baked feature grid → the configured
+    backend). Pass both to share one model across several renderers (e.g.
+    benchmark arms comparing engines on identical parameters).
+    """
+    config = config.resolved()
+    if (model is None) != (params is None):
+        raise TypeError("make_renderer: pass model and params together "
+                        "(or neither)")
+    if model is None:
+        scene = scenes.make_scene(config.scene)
+        model, _ = models.make_model(
+            config.model_kind, grid_res=config.grid_res,
+            channels=config.channels, decoder=config.decoder,
+            num_samples=config.num_samples, backend=config.backend,
+            stream_capacity=config.stream_capacity)
+        params = model.init_baked(scene)
+    return Renderer(config, model, params)

@@ -1,5 +1,12 @@
-from repro.core import (costmodel, engine, layout, pipeline, schedule, sparw,
-                        streaming)
+from repro.core import (config, costmodel, engine, layout, pipeline, schedule,
+                        sparw, streaming)
+from repro.core.config import (  # noqa: F401
+    RenderConfig,
+    RenderRequest,
+    RenderResult,
+    RenderStats,
+)
 
-__all__ = ["costmodel", "engine", "layout", "pipeline", "schedule", "sparw",
-           "streaming"]
+__all__ = ["config", "costmodel", "engine", "layout", "pipeline", "schedule",
+           "sparw", "streaming", "RenderConfig", "RenderRequest",
+           "RenderResult", "RenderStats"]

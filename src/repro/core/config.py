@@ -1,0 +1,248 @@
+"""The declarative rendering API surface: config / request / result.
+
+The SPARW stack has three execution layers (``CiceroRenderer``,
+``DeviceSparwEngine``, ``RenderServeEngine``) that historically each
+re-declared the same loose kwargs (``window``, ``phi_deg``, ``hole_cap``,
+``mode``, ``engine``, ``num_slots``). This module replaces that with three
+frozen dataclasses the whole stack compiles against:
+
+* :class:`RenderConfig` — the *compile-relevant* knobs (scene, camera,
+  window, phi, hole cap, backend, engine, slots, model shape). Frozen,
+  hashable by value, usable as a ``jax.jit`` static argument and as an
+  engine-cache key: two configs compare equal iff they compile to the same
+  device program, so caching an engine per config can never go stale.
+* :class:`RenderRequest` — one client session's *workload*: the pose
+  trajectory plus per-session overrides (``window``, ``hole_cap``) and
+  serving metadata (``priority``, ``deadline_ms``). Frozen; hashable by
+  identity (trajectories carry arrays).
+* :class:`RenderResult` — what a session gets back: frames, the
+  :class:`RenderStats` work accounting, and wall-clock timing.
+
+Engines accept ``config=RenderConfig(...)``; the legacy kwarg constructors
+keep working through :func:`legacy_config` (a ``DeprecationWarning`` +
+translation shim) so downstream code migrates gradually. The top-level
+facade over these types is :mod:`repro.api`.
+"""
+from __future__ import annotations
+
+import dataclasses
+import hashlib
+import warnings
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Tuple
+
+import numpy as np
+
+from repro.nerf.rays import Camera
+
+# sentinel distinguishing "kwarg not passed" from an explicit None (several
+# legacy kwargs — phi_deg, hole_cap — legitimately default to None)
+_UNSET = object()
+
+
+# ---------------------------------------------------------------------------
+# RenderStats — work accounting shared by every engine
+# ---------------------------------------------------------------------------
+
+
+@dataclass
+class RenderStats:
+    """Per-session SPARW work accounting (paper Fig. 13/16 quantities)."""
+
+    frames: int = 0
+    reference_renders: int = 0
+    warped_pixels: int = 0
+    sparse_pixels: int = 0
+    total_pixels: int = 0
+    hole_fractions: List[float] = field(default_factory=list)
+
+    @property
+    def mean_hole_fraction(self) -> float:
+        return float(np.mean(self.hole_fractions)) if self.hole_fractions else 0.0
+
+    @property
+    def mlp_work_fraction(self) -> float:
+        """Fraction of baseline MLP work actually executed (paper: ~12% at
+        window 16 ⇒ 88% avoided)."""
+        if self.total_pixels == 0:
+            return 1.0
+        full_equiv = self.reference_renders * (self.total_pixels / max(self.frames, 1))
+        return (full_equiv + self.sparse_pixels) / self.total_pixels
+
+    def record_frame(self, hole_count: int, overflowed: bool, hw: int) -> None:
+        """Accumulate one rendered frame's hole statistics (shared by the
+        single-session trajectory readback and the serving engine's
+        finalize — the overflow accounting must stay identical)."""
+        self.frames += 1
+        self.total_pixels += hw
+        self.hole_fractions.append(hole_count / hw)
+        self.sparse_pixels += hw if overflowed else hole_count
+        self.warped_pixels += hw - hole_count
+
+
+# ---------------------------------------------------------------------------
+# RenderConfig — the compile surface
+# ---------------------------------------------------------------------------
+
+
+@dataclass(frozen=True)
+class RenderConfig:
+    """Everything that shapes a compiled SPARW program, in one frozen value.
+
+    Hashable by field values (``frozen=True`` + ``eq=True``), so it works
+    directly as a ``jax.jit`` static argument and as the key of the
+    renderer's engine caches: any change to a compile-relevant knob produces
+    a *different* key instead of silently reusing a stale engine.
+
+    ``camera=None`` means "derive a square pinhole camera from ``res``";
+    :meth:`resolved` normalizes that so engines always see a concrete
+    :class:`~repro.nerf.rays.Camera`.
+    """
+
+    # --- scene + camera ---------------------------------------------------
+    scene: str = "lego"
+    camera: Optional[Camera] = None
+    res: int = 64  # used only when camera is None
+
+    # --- SPARW schedule + engine routing ----------------------------------
+    window: int = 16            # warp window N (targets per reference)
+    phi_deg: Optional[float] = None  # warp angular threshold (paper Eq. 4)
+    hole_cap: Optional[int] = None   # static sparse-ray capacity per frame
+    mode: str = "offtraj"       # offtraj | temporal (TEMP-N baseline)
+    engine: str = "device"      # device | host (seed reference loop)
+    num_slots: int = 4          # serving: concurrent session slots
+    ray_chunk: int = 1 << 14    # lax.map chunk for full-frame renders
+
+    # --- model shape (what repro.api.make_renderer builds) ----------------
+    model_kind: str = "dvgo"
+    backend: str = "reference"  # reference | streaming (Pallas hot path)
+    grid_res: int = 48
+    channels: int = 4
+    decoder: str = "direct"
+    num_samples: int = 32
+    stream_capacity: int = 512
+
+    def __post_init__(self) -> None:
+        if self.mode not in ("offtraj", "temporal"):
+            raise ValueError(f"mode must be offtraj|temporal, got {self.mode!r}")
+        if self.engine not in ("device", "host"):
+            raise ValueError(f"engine must be device|host, got {self.engine!r}")
+        if self.window < 1:
+            raise ValueError(f"window must be >= 1, got {self.window}")
+        if self.num_slots < 1:
+            raise ValueError(f"num_slots must be >= 1, got {self.num_slots}")
+        if self.hole_cap is not None and self.hole_cap < 1:
+            raise ValueError(f"hole_cap must be >= 1 (or None for the "
+                             f"default), got {self.hole_cap}")
+
+    # ------------------------------------------------------------------
+    def resolved(self) -> "RenderConfig":
+        """Return a config whose ``camera`` is a concrete :class:`Camera`."""
+        if self.camera is not None:
+            return self
+        return dataclasses.replace(self, camera=Camera.square(self.res))
+
+    def replace(self, **kw) -> "RenderConfig":
+        return dataclasses.replace(self, **kw)
+
+    def fingerprint(self) -> str:
+        """Stable short digest of every field — recorded in benchmark
+        artifacts and usable as a cross-process cache key. Equal configs
+        have equal fingerprints; any field change flips it."""
+        return hashlib.sha1(repr(self.resolved()).encode()).hexdigest()[:12]
+
+    def apply_request(self, request: "RenderRequest") -> "RenderConfig":
+        """Fold a request's per-session compile-relevant overrides in."""
+        kw = {}
+        if request.window is not None:
+            kw["window"] = request.window
+        if request.hole_cap is not None:
+            kw["hole_cap"] = request.hole_cap
+        return dataclasses.replace(self, **kw) if kw else self
+
+
+# ---------------------------------------------------------------------------
+# RenderRequest / RenderResult — the workload surface
+# ---------------------------------------------------------------------------
+
+
+@dataclass(frozen=True, eq=False)  # eq=False: hash by identity (holds arrays)
+class RenderRequest:
+    """One client session: a pose trajectory + per-session overrides.
+
+    ``window``/``hole_cap`` override the engine config *for this request
+    only*. A single-session ``render()`` compiles (and caches) a dedicated
+    engine at the override, so any valid value works; under ``serve()`` the
+    batch shape is compiled once, so overrides must fit inside the engine's
+    static capacities (``window`` ≤ ``config.window``, ``hole_cap`` ≤ the
+    engine's compaction capacity — enforced at submit with a ``ValueError``).
+    ``priority``/``deadline_ms`` feed the serving engine's
+    :class:`~repro.serve.policies.SchedulingPolicy`.
+    """
+
+    poses: Tuple[object, ...]  # [4,4] c2w pose per frame
+    sid: Optional[int] = None
+    window: Optional[int] = None
+    hole_cap: Optional[int] = None
+    priority: int = 0
+    deadline_ms: Optional[float] = None
+
+    def __post_init__(self) -> None:
+        object.__setattr__(self, "poses", tuple(self.poses))
+        if not self.poses:
+            raise ValueError("RenderRequest needs at least one pose")
+        if self.window is not None and self.window < 1:
+            raise ValueError(f"window override must be >= 1, got {self.window}")
+        if self.hole_cap is not None and self.hole_cap < 1:
+            raise ValueError(
+                f"hole_cap override must be >= 1, got {self.hole_cap}")
+
+
+@dataclass(frozen=True, eq=False)
+class RenderResult:
+    """Frames + work statistics + timing for one rendered request."""
+
+    frames: Tuple[object, ...]  # [H,W,3] per frame
+    stats: RenderStats
+    wall_s: float
+    sid: Optional[int] = None
+
+    @property
+    def fps(self) -> float:
+        return len(self.frames) / max(self.wall_s, 1e-9)
+
+
+# ---------------------------------------------------------------------------
+# Legacy-kwarg deprecation shim
+# ---------------------------------------------------------------------------
+
+
+def legacy_config(caller: str, cam: Optional[Camera], config: Optional[RenderConfig],
+                  defaults: Dict[str, object], legacy: Dict[str, object]
+                  ) -> RenderConfig:
+    """Resolve a constructor's ``(cam, config=, **legacy)`` arguments.
+
+    New style: ``config=RenderConfig(...)`` (no ``cam``, no loose kwargs) —
+    returned resolved, no warning. Old style: positional ``cam`` + loose
+    kwargs — emits a ``DeprecationWarning`` and translates onto a
+    :class:`RenderConfig` using ``defaults`` for the caller's historical
+    kwarg defaults. Mixing both styles is an error.
+    """
+    passed = {k: v for k, v in legacy.items() if v is not _UNSET}
+    if config is not None:
+        if cam is not None or passed:
+            raise TypeError(
+                f"{caller}: pass either config=RenderConfig(...) or the "
+                f"legacy (cam, {', '.join(sorted(defaults))}) kwargs, not both")
+        return config.resolved()
+    if cam is None:
+        raise TypeError(f"{caller}: missing config=RenderConfig(...) "
+                        "(or a legacy positional camera)")
+    warnings.warn(
+        f"{caller}(cam, {', '.join(sorted(defaults))}=...) is deprecated; "
+        f"pass config=repro.core.config.RenderConfig(camera=cam, ...) "
+        f"or use the repro.api facade (make_renderer/render/serve)",
+        DeprecationWarning, stacklevel=3)
+    kw = dict(defaults)
+    kw.update(passed)
+    return RenderConfig(camera=cam, **kw).resolved()

@@ -30,8 +30,10 @@ Design:
   call — ``vmap`` over per-session reference frames and hole compaction,
   with the model params (and the streaming backend's MVoxel table)
   broadcast so one copy serves every session. The overflow→dense fallback
-  is isolated per session. This is the device half of the multi-session
-  serving engine (:mod:`repro.serve.render_engine`).
+  is isolated per session, and per-session ``win_lens``/``caps`` inputs
+  let ragged windows (sessions with different ``window``/``hole_cap``
+  overrides) batch into the same compiled program. This is the device half
+  of the multi-session serving engine (:mod:`repro.serve.render_engine`).
 * With ``NerfModel`` ``backend="streaming"`` the NeRF evaluation inside the
   window runs through the Pallas kernels end-to-end
   (``ops.gather_features_streaming`` + ``ops.nerf_mlp``); the MVoxel halo
@@ -40,49 +42,21 @@ Design:
 """
 from __future__ import annotations
 
-from dataclasses import dataclass, field
-from typing import List, NamedTuple, Optional, Tuple
+from typing import Dict, List, NamedTuple, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 from repro.core import schedule, sparw
+from repro.core.config import (  # noqa: F401 (RenderStats re-export)
+    _UNSET,
+    RenderConfig,
+    RenderStats,
+    legacy_config,
+)
 from repro.nerf import rays
 from repro.utils import round_up
-
-
-@dataclass
-class RenderStats:
-    frames: int = 0
-    reference_renders: int = 0
-    warped_pixels: int = 0
-    sparse_pixels: int = 0
-    total_pixels: int = 0
-    hole_fractions: List[float] = field(default_factory=list)
-
-    @property
-    def mean_hole_fraction(self) -> float:
-        return float(np.mean(self.hole_fractions)) if self.hole_fractions else 0.0
-
-    @property
-    def mlp_work_fraction(self) -> float:
-        """Fraction of baseline MLP work actually executed (paper: ~12% at
-        window 16 ⇒ 88% avoided)."""
-        if self.total_pixels == 0:
-            return 1.0
-        full_equiv = self.reference_renders * (self.total_pixels / max(self.frames, 1))
-        return (full_equiv + self.sparse_pixels) / self.total_pixels
-
-    def record_frame(self, hole_count: int, overflowed: bool, hw: int) -> None:
-        """Accumulate one rendered frame's hole statistics (shared by the
-        single-session trajectory readback and the serving engine's
-        finalize — the overflow accounting must stay identical)."""
-        self.frames += 1
-        self.total_pixels += hw
-        self.hole_fractions.append(hole_count / hw)
-        self.sparse_pixels += hw if overflowed else hole_count
-        self.warped_pixels += hw - hole_count
 
 
 class WindowResult(NamedTuple):
@@ -108,26 +82,43 @@ class BatchedWindowResult(NamedTuple):
 class DeviceSparwEngine:
     """Renders SPARW warp windows as single jitted device programs.
 
-    ``hole_cap`` is the static per-frame sparse-ray capacity (default: a
-    quarter of the frame — paper hole fractions are 2–6%, so this leaves a
-    wide margin before the dense fallback triggers).
+    Construct with ``config=RenderConfig(...)`` (the legacy
+    ``(cam, window=..., ...)`` kwargs keep working behind a
+    ``DeprecationWarning``). ``config.hole_cap`` is the static per-frame
+    sparse-ray capacity (default: a quarter of the frame — paper hole
+    fractions are 2–6%, so this leaves a wide margin before the dense
+    fallback triggers).
     """
 
-    def __init__(self, model, params: dict, cam: rays.Camera,
-                 window: int = 16, phi_deg: Optional[float] = None,
-                 hole_cap: Optional[int] = None, ray_chunk: int = 1 << 14):
+    _LEGACY_DEFAULTS = dict(window=16, phi_deg=None, hole_cap=None,
+                            ray_chunk=1 << 14)
+
+    def __init__(self, model, params: dict, cam: Optional[rays.Camera] = None,
+                 window=_UNSET, phi_deg=_UNSET, hole_cap=_UNSET,
+                 ray_chunk=_UNSET, *, config: Optional[RenderConfig] = None):
+        config = legacy_config(
+            "DeviceSparwEngine", cam, config, self._LEGACY_DEFAULTS,
+            dict(window=window, phi_deg=phi_deg, hole_cap=hole_cap,
+                 ray_chunk=ray_chunk))
+        self.config = config
         self.model = model
-        self.cam = cam
-        self.window = window
-        self.phi_deg = phi_deg
-        hw = cam.height * cam.width
-        self.hole_cap = int(hole_cap) if hole_cap else round_up(max(hw // 4, 128), 128)
-        self.ray_chunk = min(ray_chunk, hw)
+        self.cam = config.camera
+        self.window = config.window
+        self.phi_deg = config.phi_deg
+        hw = self.cam.height * self.cam.width
+        self.hole_cap = (int(config.hole_cap) if config.hole_cap is not None
+                         else round_up(max(hw // 4, 128), 128))
+        self.ray_chunk = min(config.ray_chunk, hw)
         # streaming backend: MVoxel table built once here, never per frame
         self.params = model.prepare_streaming(params)
         self.num_window_calls = 0  # jitted window invocations (tests assert)
         self._window_jit = jax.jit(self._render_window)
         self._windows_jit = jax.jit(self._render_windows)  # [S]-batched
+        # staged full-window/full-cap defaults per (S, N) so a default
+        # render_windows call never rebuilds them (and the serving engine's
+        # explicit arrays follow the same staging discipline)
+        self._default_masks: Dict[Tuple[int, int],
+                                  Tuple[jnp.ndarray, jnp.ndarray]] = {}
 
     # ------------------------------------------------------------------
     # fully in-graph primitives
@@ -238,24 +229,37 @@ class DeviceSparwEngine:
                             counts.astype(jnp.int32), overflowed)
 
     def _render_windows(self, params: dict, ref_poses: jnp.ndarray,
-                        tgt_poses: jnp.ndarray) -> BatchedWindowResult:
+                        tgt_poses: jnp.ndarray, win_lens: jnp.ndarray,
+                        caps: jnp.ndarray) -> BatchedWindowResult:
         """S concurrent sessions' windows — ONE traced function.
 
         ``ref_poses`` is [S,4,4] (one reference per session), ``tgt_poses``
         [S,N,4,4]. Model params — including the streaming backend's MVoxel
         table — are broadcast (``in_axes=None``): one table serves every
         session. The overflow fallback is *per session*: a session that
-        exceeds ``hole_cap`` takes its frames from the dense branch while
-        its neighbours keep the sparse-path output bit-for-bit (the dense
-        branch itself is guarded by a single ``lax.cond`` so the
+        exceeds its hole capacity takes its frames from the dense branch
+        while its neighbours keep the sparse-path output bit-for-bit (the
+        dense branch itself is guarded by a single ``lax.cond`` so the
         no-overflow steady state compiles to the sparse path only).
+
+        ``win_lens`` [S] and ``caps`` [S] carry the per-session overrides
+        that let *ragged* windows batch into this one program: a session
+        whose window is shorter than N pads its targets (padded frames are
+        rendered and discarded on the host) and the window-length mask
+        excludes those pads from the overflow decision; ``caps`` is the
+        session's effective hole capacity (≤ the engine's static
+        ``hole_cap``, which fixes the compaction shape). Both are traced
+        inputs — value changes never recompile the program.
         """
         s, n = tgt_poses.shape[0], tgt_poses.shape[1]
         h, w = self.cam.height, self.cam.width
         warped_rgb, holes, idx, counts = jax.vmap(
             self._warp_and_compact, in_axes=(None, 0, 0))(
             params, ref_poses, tgt_poses)
-        overflowed = jnp.max(counts, axis=1) > self.hole_cap  # [S]
+        # per-session window-length mask: padded frames past win_lens[s]
+        # must not trip that session's dense fallback
+        live = jnp.arange(n)[None, :] < win_lens[:, None]  # [S, N]
+        overflowed = jnp.max(jnp.where(live, counts, 0), axis=1) > caps  # [S]
         sparse = jax.vmap(self._sparse_fill, in_axes=(None, 0, 0, 0))(
             params, tgt_poses, idx, counts)
         dense = jax.lax.cond(
@@ -277,14 +281,32 @@ class DeviceSparwEngine:
         self.num_window_calls += 1
         return self._window_jit(self.params, ref_pose, tgt_poses)
 
-    def render_windows(self, ref_poses: jnp.ndarray, tgt_poses: jnp.ndarray
+    def render_windows(self, ref_poses: jnp.ndarray, tgt_poses: jnp.ndarray,
+                       win_lens: Optional[jnp.ndarray] = None,
+                       caps: Optional[jnp.ndarray] = None
                        ) -> BatchedWindowResult:
         """Render S sessions' warp windows ([S,4,4] refs vs [S,N,4,4]
         targets) as a single jitted call — the multi-session serving tick.
+
+        ``win_lens``/``caps`` ([S] int32 device arrays) carry per-session
+        window-length / hole-capacity overrides; omitted they default to
+        the full window and the engine's static capacity (staged once per
+        (S, N), so the default path stays transfer-free after warm-up).
         Re-traces only per distinct (S, N); a fixed-slot serving engine
-        therefore compiles exactly one program for its whole lifetime."""
+        therefore compiles exactly one program for its whole lifetime.
+        """
+        s, n = tgt_poses.shape[0], tgt_poses.shape[1]
+        if win_lens is None or caps is None:
+            staged = self._default_masks.get((s, n))
+            if staged is None:
+                staged = (jnp.full((s,), n, jnp.int32),
+                          jnp.full((s,), self.hole_cap, jnp.int32))
+                self._default_masks[(s, n)] = staged
+            win_lens = staged[0] if win_lens is None else win_lens
+            caps = staged[1] if caps is None else caps
         self.num_window_calls += 1
-        return self._windows_jit(self.params, ref_poses, tgt_poses)
+        return self._windows_jit(self.params, ref_poses, tgt_poses,
+                                 win_lens, caps)
 
     def render_trajectory(self, poses: List[jnp.ndarray]
                           ) -> Tuple[List[jnp.ndarray], RenderStats]:

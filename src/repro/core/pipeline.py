@@ -18,47 +18,116 @@ previously *rendered* frame — serialized, error-accumulating).
 """
 from __future__ import annotations
 
-from typing import Dict, List, Optional, Tuple
+from typing import Dict, List, Optional, Sequence, Tuple, Union
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 from repro.core import schedule, sparw
-from repro.core.engine import DeviceSparwEngine, RenderStats  # noqa: F401 (re-export)
+from repro.core.config import (  # noqa: F401 (RenderStats re-export)
+    _UNSET,
+    RenderConfig,
+    RenderRequest,
+    RenderResult,
+    RenderStats,
+    legacy_config,
+)
+from repro.core.engine import DeviceSparwEngine  # noqa: F401 (re-export)
 from repro.nerf import models, rays
 from repro.utils import psnr
 
 
 class CiceroRenderer:
-    def __init__(self, model: models.NerfModel, params: dict, cam: rays.Camera,
-                 window: int = 16, phi_deg: Optional[float] = None,
-                 mode: str = "offtraj", engine: str = "device",
-                 hole_cap: Optional[int] = None):
+    """Construct with ``config=RenderConfig(...)``; the legacy
+    ``(cam, window=..., mode=..., engine=..., ...)`` kwargs keep working
+    behind a ``DeprecationWarning``. The compile-relevant knobs live in the
+    frozen config (exposed read-only — mutating a renderer mid-life was the
+    stale-engine-cache hazard the config keying exists to close); engines
+    are cached per ``(params identity, RenderConfig)`` so any knob change
+    transparently builds/reuses the right compiled program.
+    """
+
+    _LEGACY_DEFAULTS = dict(window=16, phi_deg=None, mode="offtraj",
+                            engine="device", hole_cap=None)
+
+    def __init__(self, model: models.NerfModel, params: dict,
+                 cam: Optional[rays.Camera] = None,
+                 window=_UNSET, phi_deg=_UNSET, mode=_UNSET, engine=_UNSET,
+                 hole_cap=_UNSET, *, config: Optional[RenderConfig] = None):
+        config = legacy_config(
+            "CiceroRenderer", cam, config, self._LEGACY_DEFAULTS,
+            dict(window=window, phi_deg=phi_deg, mode=mode, engine=engine,
+                 hole_cap=hole_cap))
+        self.config = config
         self.model = model
         # streaming backend: hoist the MVoxel halo re-layout out of every
         # render path (host loop, baselines, DS-2) — no-op otherwise
         self.params = model.prepare_streaming(params)
-        self.cam = cam
-        self.window = window
-        self.phi_deg = phi_deg
-        self.mode = mode
-        self.engine = engine
-        self.hole_cap = hole_cap
+        self.cam = config.camera
         self._render_rays = model.render_rays_jit  # cached once per model
         self._warp = jax.jit(
             lambda rgb, dep, p_ref, p_tgt: sparw.warp_frame(
-                rgb, dep, p_ref, p_tgt, cam, phi_deg=phi_deg))
-        self._device_engine: Optional[DeviceSparwEngine] = None
-        self._serve_engines: Dict[int, object] = {}  # num_slots -> engine
+                rgb, dep, p_ref, p_tgt, self.cam, phi_deg=config.phi_deg))
+        # engine caches keyed on the FULL config (hash == compile surface)
+        # plus the params identity — never on a lone knob like num_slots,
+        # which could silently hand back a stale compiled program. The
+        # params id only varies if a caller reassigns ``renderer.params``
+        # (engines capture params at construction, so a swap must miss).
+        # Bounded: per-request overrides would otherwise grow one compiled
+        # engine per distinct (window, hole_cap) pair forever.
+        self._device_engines: Dict[tuple, DeviceSparwEngine] = {}
+        self._serve_engines: Dict[tuple, object] = {}
+        self._max_cached_engines = 16
+
+    @staticmethod
+    def _cache_put(cache: Dict[tuple, object], key: tuple, value: object,
+                   limit: int) -> None:
+        """Insert with oldest-first eviction (dicts preserve insertion
+        order); an evicted engine keeps working for anyone holding it —
+        only the cache forgets it."""
+        while len(cache) >= limit:
+            cache.pop(next(iter(cache)))
+        cache[key] = value
+
+    # read-only views of the compile-relevant knobs (kwarg-era attributes)
+    @property
+    def window(self) -> int:
+        return self.config.window
+
+    @property
+    def phi_deg(self) -> Optional[float]:
+        return self.config.phi_deg
+
+    @property
+    def mode(self) -> str:
+        return self.config.mode
+
+    @property
+    def engine(self) -> str:
+        return self.config.engine
+
+    @property
+    def hole_cap(self) -> Optional[int]:
+        return self.config.hole_cap
+
+    def _engine_key(self, config: RenderConfig) -> tuple:
+        return (id(self.params), config)
+
+    def device_engine_for(self, config: RenderConfig) -> DeviceSparwEngine:
+        """The cached device engine compiled for ``config`` (built on first
+        use; one engine per distinct compile surface)."""
+        key = self._engine_key(config)
+        eng = self._device_engines.get(key)
+        if eng is None:
+            eng = DeviceSparwEngine(self.model, self.params, config=config)
+            self._cache_put(self._device_engines, key, eng,
+                            self._max_cached_engines)
+        return eng
 
     @property
     def device_engine(self) -> DeviceSparwEngine:
-        if self._device_engine is None:
-            self._device_engine = DeviceSparwEngine(
-                self.model, self.params, self.cam, window=self.window,
-                phi_deg=self.phi_deg, hole_cap=self.hole_cap)
-        return self._device_engine
+        return self.device_engine_for(self.config)
 
     # ------------------------------------------------------------------
     def full_frame(self, c2w: jnp.ndarray) -> Tuple[jnp.ndarray, jnp.ndarray]:
@@ -79,56 +148,112 @@ class CiceroRenderer:
         return jnp.asarray(out.reshape(h, w, 3))
 
     # ------------------------------------------------------------------
-    def render_trajectory(self, poses: List[jnp.ndarray]
+    def render_trajectory(self, poses: Sequence[jnp.ndarray], *,
+                          config: Optional[RenderConfig] = None
                           ) -> Tuple[List[jnp.ndarray], RenderStats]:
         """SPARW rendering of a pose trajectory. Returns (frames, stats).
 
         Routes through the device-resident engine except for the serialized
         TEMP-N mode (whose reference depends on the previous *rendered*
         frame) or when ``engine="host"`` was requested explicitly.
+        ``config`` renders with a variant compile surface (e.g. a request's
+        ``window``/``hole_cap`` overrides) through the per-config engine
+        cache.
         """
-        if self.engine == "device" and self.mode == "offtraj":
-            return self.device_engine.render_trajectory(poses)
-        return self.render_trajectory_host(poses)
+        cfg = config or self.config
+        if cfg.engine == "device" and cfg.mode == "offtraj":
+            return self.device_engine_for(cfg).render_trajectory(list(poses))
+        return self.render_trajectory_host(list(poses), config=cfg)
+
+    def render(self, request: RenderRequest) -> RenderResult:
+        """Render one declarative :class:`RenderRequest` (the single-session
+        form of the unified API; :mod:`repro.api` wraps this). Folds the
+        request's ``window``/``hole_cap`` overrides into the config, renders
+        the trajectory, and returns frames + stats + wall-clock timing."""
+        import time as _time
+
+        cfg = self.config.apply_request(request)
+        t0 = _time.time()
+        frames, stats = self.render_trajectory(request.poses, config=cfg)
+        jax.block_until_ready(frames)
+        return RenderResult(frames=tuple(frames), stats=stats,
+                            wall_s=_time.time() - t0, sid=request.sid)
+
+    def serve_engine_for(self, config: RenderConfig):
+        """The cached serving engine for ``config`` — keyed on the FULL
+        config (slots + window + hole_cap + every other compile knob, plus
+        the params identity at lookup time), closing the stale-cache hazard
+        of the old per-``num_slots`` keying."""
+        from repro.serve.render_engine import RenderServeEngine
+
+        key = self._engine_key(config)
+        serve = self._serve_engines.get(key)
+        if serve is None:
+            serve = RenderServeEngine(self.model, self.params, config=config)
+            self._cache_put(self._serve_engines, key, serve,
+                            self._max_cached_engines)
+        return serve
+
+    def serve(self, requests: Sequence[Union[RenderRequest, Sequence[jnp.ndarray]]],
+              policy=None, num_slots: Optional[int] = None
+              ) -> Tuple[List[RenderResult], Dict[str, object]]:
+        """Serve several :class:`RenderRequest` sessions through ONE batched
+        device program per tick (continuous batching of warp windows — see
+        :mod:`repro.serve.render_engine`), with a pluggable admission
+        ``policy`` (:mod:`repro.serve.policies`; default FIFO, which is
+        bit-identical to pre-policy serving).
+
+        Returns (per-request :class:`RenderResult` list, serve metrics).
+        Each session's frames bit-match what :meth:`render` would produce
+        for it alone (per-session ``window``/``hole_cap`` overrides
+        included).
+        """
+        from repro.serve.render_engine import RenderSession
+
+        if self.config.mode != "offtraj":
+            raise ValueError("multi-session serving requires mode='offtraj' "
+                             "(TEMP-N is inherently serialized)")
+        reqs = [r if isinstance(r, RenderRequest)
+                else RenderRequest(poses=tuple(r)) for r in requests]
+        slots = num_slots or self.config.num_slots
+        serve = self.serve_engine_for(self.config.replace(num_slots=slots))
+        from repro.serve.policies import resolve_policy
+        serve.policy = resolve_policy(policy)
+        sessions = [RenderSession.from_request(req, sid=i)
+                    for i, req in enumerate(reqs)]
+        metrics = serve.run(sessions)
+        results = [RenderResult(frames=tuple(s.frames), stats=s.stats,
+                                wall_s=float(sum(s.frame_latencies_s)),
+                                sid=s.sid)
+                   for s in sessions]
+        return results, metrics
 
     def render_trajectories(self, trajectories: List[List[jnp.ndarray]],
                             num_slots: Optional[int] = None
                             ) -> Tuple[List[List[jnp.ndarray]],
                                        List[RenderStats], Dict[str, object]]:
-        """Multi-session SPARW: serve several client trajectories through
-        ONE batched device program per tick (continuous batching of warp
-        windows — see :mod:`repro.serve.render_engine`).
+        """Multi-session SPARW over bare pose lists (the pre-request API;
+        now a thin wrapper over :meth:`serve` with FIFO admission — the
+        output is bit-identical to the historical engine).
 
         Returns (per-session frame lists, per-session stats, serve
         metrics). Each session's frames bit-match what
         :meth:`render_trajectory` would produce for it alone.
         """
-        from repro.serve.render_engine import RenderServeEngine, RenderSession
+        results, metrics = self.serve(
+            [RenderRequest(poses=tuple(t)) for t in trajectories],
+            policy="fifo", num_slots=num_slots or len(trajectories))
+        return ([list(r.frames) for r in results],
+                [r.stats for r in results], metrics)
 
-        if self.mode != "offtraj":
-            raise ValueError("multi-session serving requires mode='offtraj' "
-                             "(TEMP-N is inherently serialized)")
-        slots = num_slots or len(trajectories)
-        # cached per slot count: repeat calls reuse the compiled batch
-        # program (one compile per engine lifetime), mirroring device_engine
-        serve = self._serve_engines.get(slots)
-        if serve is None:
-            serve = self._serve_engines[slots] = RenderServeEngine(
-                self.model, self.params, self.cam, num_slots=slots,
-                window=self.window, phi_deg=self.phi_deg,
-                hole_cap=self.hole_cap)
-        sessions = [RenderSession(sid=i, poses=list(t))
-                    for i, t in enumerate(trajectories)]
-        metrics = serve.run(sessions)
-        return ([list(s.frames) for s in sessions],
-                [s.stats for s in sessions], metrics)
-
-    def render_trajectory_host(self, poses: List[jnp.ndarray]
+    def render_trajectory_host(self, poses: List[jnp.ndarray], *,
+                               config: Optional[RenderConfig] = None
                                ) -> Tuple[List[jnp.ndarray], RenderStats]:
         """The seed host-side frame loop (one frame at a time, hole mask
         synced to host every frame). Reference implementation + TEMP-N."""
+        cfg = config or self.config
         stats = RenderStats()
-        plan = schedule.WarpSchedule(self.window, self.mode).plan(poses)
+        plan = schedule.WarpSchedule(cfg.window, cfg.mode).plan(poses)
         frames: List[Optional[jnp.ndarray]] = [None] * len(poses)
         ref_cache: Dict[int, Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]] = {}
 
@@ -136,7 +261,7 @@ class CiceroRenderer:
             f = rec["frame"]
             k = rec["window_start"]
             if k not in ref_cache:
-                if self.mode == "temporal" and rec["ref_frame_idx"] is not None \
+                if cfg.mode == "temporal" and rec["ref_frame_idx"] is not None \
                         and frames[rec["ref_frame_idx"]] is not None:
                     # TEMP-N: reuse the previously *rendered* (warped) frame —
                     # depth comes from a render of that pose (paper's TEMP-16

@@ -1,7 +1,14 @@
-"""Serving engines: LM continuous batching (:mod:`repro.serve.engine`) and
-the multi-session SpaRW render serving engine
-(:mod:`repro.serve.render_engine`)."""
+"""Serving engines: LM continuous batching (:mod:`repro.serve.engine`), the
+multi-session SpaRW render serving engine
+(:mod:`repro.serve.render_engine`), and the pluggable admission policies
+they share (:mod:`repro.serve.policies`)."""
 from repro.serve.engine import Request, ServeEngine  # noqa: F401
+from repro.serve.policies import (  # noqa: F401
+    FifoPolicy,
+    PriorityPolicy,
+    SchedulingPolicy,
+    resolve_policy,
+)
 from repro.serve.render_engine import (  # noqa: F401
     RenderServeEngine,
     RenderSession,

@@ -1,0 +1,96 @@
+"""Pluggable admission policies for the render serving engine.
+
+The :class:`~repro.serve.render_engine.RenderServeEngine` has a fixed
+number of slots; when a slot drains (its session's trajectory finished)
+the engine asks its :class:`SchedulingPolicy` which *queued* session takes
+the slot. That is the whole policy surface — one pure selection function —
+so policies compose with the engine without touching the device program:
+
+* :class:`FifoPolicy` — admit in submission order (index 0). This is the
+  engine's historical behavior, so a FIFO run is bit-identical to the
+  pre-policy engine (parity-tested).
+* :class:`PriorityPolicy` — deadline/priority-aware admission: highest
+  ``priority`` first, then least remaining ``deadline_ms`` budget, then
+  submission order. A high-priority request that arrives *after* a queued
+  low-priority one preempts it for the next drained slot.
+
+A policy never interrupts a session mid-flight: Cicero's warp-window
+economics (one reference render amortized over ``window`` targets) make
+the window the natural preemption quantum, and a drained slot is the only
+point where the batch membership changes anyway (the device program is
+compiled once for the engine's lifetime).
+"""
+from __future__ import annotations
+
+import math
+from typing import Optional, Protocol, Sequence, Union, runtime_checkable
+
+
+@runtime_checkable
+class SchedulingPolicy(Protocol):
+    """Selects which queued session is admitted into a drained slot."""
+
+    name: str
+
+    def select(self, queue: Sequence[object], now_s: float) -> int:
+        """Return the index (into ``queue``) of the session to admit next.
+
+        ``queue`` holds :class:`~repro.serve.render_engine.RenderSession`
+        objects (each carries ``priority``, ``deadline_ms``, ``arrival``
+        and ``submitted_s``); ``now_s`` is the engine's current wall
+        clock, so deadline policies can rank by *remaining* budget.
+        """
+        ...
+
+
+class FifoPolicy:
+    """Admission in submission order — the engine's historical behavior."""
+
+    name = "fifo"
+
+    def select(self, queue: Sequence[object], now_s: float) -> int:
+        return 0
+
+
+class PriorityPolicy:
+    """Priority-then-deadline admission with FIFO tie-breaking.
+
+    Ranking (most urgent first): higher ``priority``; then smaller
+    remaining deadline budget (``submitted_s + deadline_ms - now``, with
+    no deadline ranking last); then earlier submission (``arrival``).
+    """
+
+    name = "priority"
+
+    @staticmethod
+    def _remaining_s(session, now_s: float) -> float:
+        if getattr(session, "deadline_ms", None) is None:
+            return math.inf
+        submitted = getattr(session, "submitted_s", None)
+        base = submitted if submitted is not None else now_s
+        return base + session.deadline_ms / 1e3 - now_s
+
+    def select(self, queue: Sequence[object], now_s: float) -> int:
+        return min(
+            range(len(queue)),
+            key=lambda i: (-getattr(queue[i], "priority", 0),
+                           self._remaining_s(queue[i], now_s),
+                           getattr(queue[i], "arrival", i)))
+
+
+def resolve_policy(policy: Union[None, str, SchedulingPolicy]
+                   ) -> SchedulingPolicy:
+    """None -> FIFO; "fifo"/"priority" -> the builtin; objects pass through
+    (anything with a ``select``/``name`` — the protocol is structural)."""
+    if policy is None:
+        return FifoPolicy()
+    if isinstance(policy, str):
+        try:
+            return {"fifo": FifoPolicy, "priority": PriorityPolicy}[policy]()
+        except KeyError:
+            raise ValueError(f"unknown scheduling policy {policy!r} "
+                             "(builtins: fifo, priority)") from None
+    if not isinstance(policy, SchedulingPolicy):
+        raise TypeError(f"{policy!r} does not implement SchedulingPolicy "
+                        "(needs .name and .select(queue, now_s))")
+    return policy

@@ -44,20 +44,34 @@ from __future__ import annotations
 
 import time
 from dataclasses import dataclass, field
-from typing import Dict, List, Optional
+from typing import Dict, List, Optional, Tuple, Union
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 from repro.core import schedule
-from repro.core.engine import BatchedWindowResult, DeviceSparwEngine, RenderStats
+from repro.core.config import (
+    _UNSET,
+    RenderConfig,
+    RenderRequest,
+    RenderStats,
+    legacy_config,
+)
+from repro.core.engine import BatchedWindowResult, DeviceSparwEngine
 from repro.nerf import rays
+from repro.serve.policies import SchedulingPolicy, resolve_policy
 
 
 @dataclass
 class RenderSession:
-    """One client trajectory moving through the serving engine."""
+    """One client trajectory moving through the serving engine.
+
+    ``window``/``hole_cap`` are per-session overrides of the engine config
+    (both bounded by the engine's static capacity — validated at submit);
+    ``priority``/``deadline_ms`` feed the admission policy. ``arrival`` and
+    ``submitted_s`` are stamped by :meth:`RenderServeEngine.submit`.
+    """
 
     sid: int
     poses: List[jnp.ndarray]  # the trajectory (absorbed window by window)
@@ -65,11 +79,25 @@ class RenderSession:
     stats: RenderStats = field(default_factory=RenderStats)
     frame_latencies_s: List[float] = field(default_factory=list)
     done: bool = False
+    window: Optional[int] = None      # per-session warp window override
+    hole_cap: Optional[int] = None    # per-session sparse-capacity override
+    priority: int = 0
+    deadline_ms: Optional[float] = None
+    arrival: int = -1                 # submission order (policy tie-break)
+    submitted_s: Optional[float] = None
 
     def __post_init__(self) -> None:
         if not self.poses:
             raise ValueError(f"session {self.sid}: empty trajectory")
         self.frames = [None] * len(self.poses)
+
+    @classmethod
+    def from_request(cls, request: RenderRequest, sid: int) -> "RenderSession":
+        """Build the engine-side session for a declarative request."""
+        return cls(sid=request.sid if request.sid is not None else sid,
+                   poses=list(request.poses), window=request.window,
+                   hole_cap=request.hole_cap, priority=request.priority,
+                   deadline_ms=request.deadline_ms)
 
 
 @dataclass
@@ -77,6 +105,8 @@ class _Slot:
     """Engine-side state of an occupied slot."""
 
     session: RenderSession
+    window: int                       # effective warp window for the session
+    cap: int                          # effective hole capacity
     cursor: int = 0  # next un-rendered pose index
     extrapolator: Optional[schedule.RefPoseExtrapolator] = None
 
@@ -84,23 +114,46 @@ class _Slot:
 class RenderServeEngine:
     """Fixed-slot continuous batching of SpaRW warp windows.
 
-    ``num_slots`` concurrent sessions render per tick; further sessions
-    queue and take over slots as earlier trajectories finish (slot reuse,
-    exactly like the LM engine's decode slots).
+    Construct with ``config=RenderConfig(...)`` (the legacy
+    ``(cam, num_slots=..., window=..., ...)`` kwargs keep working behind a
+    ``DeprecationWarning``). ``config.num_slots`` concurrent sessions
+    render per tick; further sessions queue and take over slots as earlier
+    trajectories finish (slot reuse, exactly like the LM engine's decode
+    slots), with the pluggable ``policy`` deciding which queued session is
+    admitted into a drained slot (:mod:`repro.serve.policies` — FIFO keeps
+    the historical bit-exact behavior).
+
+    Sessions may override ``window`` (≤ ``config.window``) and ``hole_cap``
+    (≤ the engine's static capacity) per request; ragged windows batch into
+    the single compiled device program via the per-session
+    ``win_lens``/``caps`` inputs of
+    :meth:`~repro.core.engine.DeviceSparwEngine.render_windows`. The
+    staged device copies of those arrays are rebuilt only when slot
+    composition changes (admit/drain), so a steady-state tick stays
+    transfer-free.
     """
 
-    def __init__(self, model, params: dict, cam: rays.Camera,
-                 num_slots: int = 4, window: int = 4,
-                 phi_deg: Optional[float] = None,
-                 hole_cap: Optional[int] = None, ray_chunk: int = 1 << 14):
-        self.num_slots = num_slots
-        self.window = window
-        self.engine = DeviceSparwEngine(model, params, cam, window=window,
-                                        phi_deg=phi_deg, hole_cap=hole_cap,
-                                        ray_chunk=ray_chunk)
-        self.slots: List[Optional[_Slot]] = [None] * num_slots
+    _LEGACY_DEFAULTS = dict(num_slots=4, window=4, phi_deg=None,
+                            hole_cap=None, ray_chunk=1 << 14)
+
+    def __init__(self, model, params: dict, cam: Optional[rays.Camera] = None,
+                 num_slots=_UNSET, window=_UNSET, phi_deg=_UNSET,
+                 hole_cap=_UNSET, ray_chunk=_UNSET, *,
+                 config: Optional[RenderConfig] = None,
+                 policy: Union[None, str, SchedulingPolicy] = None):
+        config = legacy_config(
+            "RenderServeEngine", cam, config, self._LEGACY_DEFAULTS,
+            dict(num_slots=num_slots, window=window, phi_deg=phi_deg,
+                 hole_cap=hole_cap, ray_chunk=ray_chunk))
+        self.config = config
+        self.policy = resolve_policy(policy)
+        self.num_slots = config.num_slots
+        self.window = config.window
+        self.engine = DeviceSparwEngine(model, params, config=config)
+        self.slots: List[Optional[_Slot]] = [None] * self.num_slots
         self.queue: List[RenderSession] = []
         self.num_ticks = 0
+        self._num_submitted = 0  # arrival stamp for policy tie-breaking
         # idle slots render a degenerate self-warp (ref == tgt ⇒ zero holes,
         # can never trigger the dense fallback); built once so a tick never
         # transfers a fresh constant to the device
@@ -109,34 +162,77 @@ class RenderServeEngine:
         # tick is then pure dispatch (transfer-guard tested)
         schedule.extrapolate_pose_jit(
             self._idle_pose, self._idle_pose,
-            jnp.asarray(window / 2.0, jnp.float32))
+            jnp.asarray(self.window / 2.0, jnp.float32))
+        # per-slot (window, cap) signature + its staged device arrays; the
+        # arrays are rebuilt (one host→device transfer) only when admission
+        # or draining changes the signature — never on a steady-state tick
+        self._slot_sig: Optional[Tuple[Tuple[int, int], ...]] = None
+        self._win_lens: Optional[jnp.ndarray] = None
+        self._caps: Optional[jnp.ndarray] = None
         # deferred host readback: (assignments, device result) per tick,
         # where assignments[s] = (session, [frame indices]) or None
         self._pending: List[tuple] = []
         self._last_result: Optional[BatchedWindowResult] = None
 
     # ------------------------------------------------------------------
+    def _effective(self, sess: RenderSession) -> Tuple[int, int]:
+        """Validate and resolve a session's (window, hole_cap) overrides
+        against the engine's static capacities."""
+        win = sess.window if sess.window is not None else self.window
+        if not 1 <= win <= self.window:
+            raise ValueError(
+                f"session {sess.sid}: window override {win} outside "
+                f"[1, {self.window}] (the engine's compiled batch shape)")
+        cap = sess.hole_cap if sess.hole_cap is not None else self.engine.hole_cap
+        if not 1 <= cap <= self.engine.hole_cap:
+            raise ValueError(
+                f"session {sess.sid}: hole_cap override {cap} outside "
+                f"[1, {self.engine.hole_cap}] (the engine's static "
+                f"compaction capacity)")
+        return win, cap
+
     def submit(self, sessions: List[RenderSession]) -> None:
+        now = time.time()
+        for sess in sessions:
+            self._effective(sess)  # fail fast on impossible overrides
+            sess.arrival = self._num_submitted
+            self._num_submitted += 1
+            if sess.submitted_s is None:
+                sess.submitted_s = now
         self.queue.extend(sessions)
 
     def _admit(self) -> None:
+        now = time.time()
         for s in range(self.num_slots):
             if self.slots[s] is None and self.queue:
-                sess = self.queue.pop(0)
+                sess = self.queue.pop(self.policy.select(self.queue, now))
+                win, cap = self._effective(sess)
                 self.slots[s] = _Slot(
-                    session=sess,
-                    extrapolator=schedule.RefPoseExtrapolator(
-                        window=self.window))
+                    session=sess, window=win, cap=cap,
+                    extrapolator=schedule.RefPoseExtrapolator(window=win))
+
+    def _stage_slot_masks(self) -> None:
+        """Refresh the staged per-slot win_lens/caps device arrays iff the
+        slot composition changed (idle slots take the engine defaults —
+        their self-warp has zero holes, so any cap is unreachable)."""
+        sig = tuple((slot.window, slot.cap) if slot is not None
+                    else (self.window, self.engine.hole_cap)
+                    for slot in self.slots)
+        if sig != self._slot_sig:
+            self._slot_sig = sig
+            self._win_lens = jnp.asarray([w for w, _ in sig], jnp.int32)
+            self._caps = jnp.asarray([c for _, c in sig], jnp.int32)
 
     def step(self) -> bool:
-        """One engine tick: admit queued sessions into free slots, then ONE
-        batched device call rendering every active session's next warp
-        window. Dispatch-only — no device→host transfer happens here; call
-        :meth:`finalize` (or :meth:`run`) to materialize frames and stats.
-        Returns False when no work remains."""
+        """One engine tick: admit queued sessions into free slots (policy
+        choice), then ONE batched device call rendering every active
+        session's next warp window. Dispatch-only — no device→host transfer
+        happens here; call :meth:`finalize` (or :meth:`run`) to materialize
+        frames and stats. Returns False when no work remains."""
         self._admit()
-        if not any(self.slots):
+        if not any(s is not None for s in self.slots):
             return False
+        self._stage_slot_masks()
 
         ref_poses, tgt_poses, assignments = [], [], []
         for s in range(self.num_slots):
@@ -148,11 +244,13 @@ class RenderServeEngine:
                 continue
             sess = slot.session
             idxs = list(range(slot.cursor,
-                              min(slot.cursor + self.window, len(sess.poses))))
+                              min(slot.cursor + slot.window, len(sess.poses))))
             win = [sess.poses[i] for i in idxs]
             ref_poses.append(slot.extrapolator.next_reference(win))
-            # pad short (trajectory-tail) windows with the last real pose —
-            # the padded frames are rendered and discarded on the host
+            # pad short windows (per-session override and/or trajectory
+            # tail) with the last real pose up to the engine's static batch
+            # width — padded frames are rendered and discarded on the host,
+            # and the win_lens mask keeps them out of the overflow decision
             tgt_poses.append(win + [win[-1]] * (self.window - len(win)))
             assignments.append((sess, idxs))
             sess.stats.reference_renders += 1
@@ -162,7 +260,8 @@ class RenderServeEngine:
 
         result = self.engine.render_windows(
             jnp.stack(ref_poses),
-            jnp.stack([jnp.stack(t) for t in tgt_poses]))
+            jnp.stack([jnp.stack(t) for t in tgt_poses]),
+            self._win_lens, self._caps)
         self._pending.append((assignments, result))
         self._last_result = result
         self.num_ticks += 1
@@ -238,4 +337,5 @@ class RenderServeEngine:
             "total_frames": total_frames,
             "per_session": per_session,
             "complete": all(s.done for s in sessions),
+            "policy": self.policy.name,
         }

@@ -1,0 +1,295 @@
+"""The repro.api facade: make_renderer/render/serve parity with the engine
+layers, pluggable scheduling policies (FIFO bit-parity, priority/deadline
+admission + drained-slot preemption), per-session window/hole_cap overrides
+batching through ONE device program, and the config-keyed engine caches."""
+import jax
+import numpy as np
+import pytest
+
+from repro import api
+from repro.core import pipeline
+from repro.core.config import RenderConfig, RenderRequest
+from repro.nerf import models, rays
+from repro.serve.policies import (FifoPolicy, PriorityPolicy,
+                                  SchedulingPolicy, resolve_policy)
+from repro.serve.render_engine import RenderServeEngine, RenderSession
+
+
+@pytest.fixture(scope="module")
+def small_model(scene):
+    model, _ = models.make_model("dvgo", grid_res=32, channels=4,
+                                 decoder="direct", num_samples=16)
+    return model, model.init_baked(scene)
+
+
+@pytest.fixture(scope="module")
+def cfg():
+    return RenderConfig(scene="lego", res=32, window=2, grid_res=32,
+                        channels=4, decoder="direct", num_samples=16,
+                        num_slots=2).resolved()
+
+
+@pytest.fixture(scope="module")
+def renderer(small_model, cfg):
+    model, params = small_model
+    return api.make_renderer(cfg, model=model, params=params)
+
+
+def _trajs(n_sessions, n_frames, step_deg=1.0):
+    return [pipeline.orbit_trajectory(n_frames, step_deg=step_deg,
+                                      phase_deg=25.0 * i)
+            for i in range(n_sessions)]
+
+
+# ---------------------------------------------------------------------------
+# facade basics
+# ---------------------------------------------------------------------------
+
+
+def test_make_renderer_builds_model_from_config(cfg):
+    r = api.make_renderer(cfg)
+    traj = pipeline.orbit_trajectory(2, step_deg=1.0)
+    result = r.render(RenderRequest(poses=tuple(traj)))
+    assert len(result.frames) == 2
+    assert result.frames[0].shape == (32, 32, 3)
+    assert result.stats.frames == 2
+    assert result.wall_s > 0 and result.fps > 0
+
+
+def test_make_renderer_rejects_half_shared_model(cfg, small_model):
+    model, params = small_model
+    with pytest.raises(TypeError):
+        api.make_renderer(cfg, model=model)
+    with pytest.raises(TypeError):
+        api.make_renderer(cfg, params=params)
+
+
+def test_render_matches_engine_layer_bitwise(renderer, small_model, cfg):
+    """The facade is a facade: renderer.render == the device engine run
+    directly on the same (model, params, config)."""
+    model, params = small_model
+    traj = pipeline.orbit_trajectory(4, step_deg=1.0)
+    result = renderer.render(RenderRequest(poses=tuple(traj)))
+    direct = pipeline.CiceroRenderer(model, params, config=cfg)
+    frames, stats = direct.render_trajectory(traj)
+    for a, b in zip(frames, result.frames):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    assert stats.sparse_pixels == result.stats.sparse_pixels
+
+
+def test_render_accepts_bare_pose_sequence(renderer):
+    traj = pipeline.orbit_trajectory(2, step_deg=1.0)
+    a = renderer.render(traj)
+    b = renderer.render(RenderRequest(poses=tuple(traj)))
+    for x, y in zip(a.frames, b.frames):
+        np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
+
+
+# ---------------------------------------------------------------------------
+# serve: FIFO bit-parity + policies
+# ---------------------------------------------------------------------------
+
+
+def test_serve_fifo_bit_identical_to_render_trajectories(renderer):
+    """renderer.serve(policy=fifo) is bit-identical to the pre-policy
+    render_trajectories path (the PR 3 serving engine)."""
+    trajs = _trajs(3, 5)
+    frames_b, stats_b, metrics_b = renderer.pipeline.render_trajectories(trajs)
+    results, metrics = renderer.serve(
+        [RenderRequest(poses=tuple(t)) for t in trajs], policy="fifo",
+        num_slots=3)
+    assert metrics["policy"] == "fifo"
+    assert metrics["total_frames"] == metrics_b["total_frames"] == 15
+    assert metrics["ticks"] == metrics_b["ticks"]
+    for i in range(3):
+        assert len(results[i].frames) == len(frames_b[i])
+        for a, b in zip(frames_b[i], results[i].frames):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+        assert results[i].stats.sparse_pixels == stats_b[i].sparse_pixels
+
+
+def test_priority_policy_admits_high_priority_late_request(renderer):
+    """One slot: a high-priority request that arrives AFTER a low-priority
+    one is already queued preempts it for the next drained slot (the
+    running session is never interrupted — the window is the quantum)."""
+    trajs = _trajs(3, 2)  # 2 frames each == exactly one window at w=2
+    reqs = [RenderRequest(poses=tuple(trajs[0]), sid=0, priority=0),
+            RenderRequest(poses=tuple(trajs[1]), sid=1, priority=0),
+            RenderRequest(poses=tuple(trajs[2]), sid=2, priority=5)]
+    engine = renderer.pipeline.serve_engine_for(
+        renderer.config.replace(num_slots=1))
+    engine.policy = resolve_policy("priority")
+    sessions = [RenderSession.from_request(r, sid=i)
+                for i, r in enumerate(reqs)]
+
+    def drive(eng, first, late):
+        """Submit ``first``, tick once, submit ``late``, drain; return the
+        order sessions were first served (from the tick assignments)."""
+        eng.submit(first)
+        assert eng.step()
+        eng.submit(late)
+        while eng.step():
+            pass
+        order = []
+        for assignments, _ in eng._pending:
+            for a in assignments:
+                if a is not None and a[0].sid not in order:
+                    order.append(a[0].sid)
+        eng.finalize()
+        return order
+
+    order = drive(engine, sessions[:2], [sessions[2]])
+    assert order == [0, 2, 1], \
+        f"late high-priority session must preempt the queued one: {order}"
+    assert all(s.done for s in sessions)
+
+    # FIFO control: same arrival pattern, same priorities, default policy —
+    # the late high-priority request waits its turn
+    fifo = renderer.pipeline.serve_engine_for(
+        renderer.config.replace(num_slots=1))
+    assert fifo is engine  # cached engine reused; policy is per-call state
+    fifo.policy = resolve_policy("fifo")
+    control = [RenderSession.from_request(
+        RenderRequest(poses=tuple(trajs[i]), priority=(5 if i == 2 else 0)),
+        sid=i) for i in range(3)]
+    assert drive(fifo, control[:2], [control[2]]) == [0, 1, 2]
+
+
+def test_priority_policy_deadline_orders_equal_priority():
+    trajs = _trajs(2, 2)
+    p = PriorityPolicy()
+    lax = RenderSession.from_request(
+        RenderRequest(poses=tuple(trajs[0]), deadline_ms=5000.0), sid=0)
+    urgent = RenderSession.from_request(
+        RenderRequest(poses=tuple(trajs[1]), deadline_ms=100.0), sid=1)
+    for i, s in enumerate((lax, urgent)):
+        s.arrival, s.submitted_s = i, 1000.0
+    assert p.select([lax, urgent], now_s=1000.0) == 1
+    assert p.select([urgent, lax], now_s=1000.0) == 0
+    # FIFO tie-break when neither carries a deadline
+    plain = [RenderSession.from_request(
+        RenderRequest(poses=tuple(trajs[i])), sid=i) for i in range(2)]
+    for i, s in enumerate(plain):
+        s.arrival, s.submitted_s = i, 1000.0
+    assert p.select(plain, now_s=1000.0) == 0
+
+
+def test_resolve_policy_contract():
+    assert resolve_policy(None).name == "fifo"
+    assert resolve_policy("fifo").name == "fifo"
+    assert resolve_policy("priority").name == "priority"
+    assert isinstance(FifoPolicy(), SchedulingPolicy)
+    custom = resolve_policy(PriorityPolicy())
+    assert custom.name == "priority"
+    with pytest.raises(ValueError):
+        resolve_policy("round-robin")
+    with pytest.raises(TypeError):
+        resolve_policy(object())
+
+
+# ---------------------------------------------------------------------------
+# per-session window / hole_cap overrides (one batched device program)
+# ---------------------------------------------------------------------------
+
+
+def test_mixed_window_batch_matches_exclusive_runs(renderer):
+    """Sessions with different window overrides batch into ONE device
+    program and each stays bit-identical to an exclusive engine compiled
+    at its own window."""
+    trajs = _trajs(2, 4)
+    reqs = [RenderRequest(poses=tuple(trajs[0]), window=1),
+            RenderRequest(poses=tuple(trajs[1]))]  # engine window (2)
+    results, metrics = renderer.serve(reqs, num_slots=2)
+    assert metrics["complete"]
+    # session 0 consumed its trajectory one frame per tick -> 4 ticks
+    assert metrics["ticks"] == 4
+    for i, win in ((0, 1), (1, None)):
+        excl = renderer.render(
+            RenderRequest(poses=tuple(trajs[i]), window=win))
+        assert len(excl.frames) == len(results[i].frames)
+        for a, b in zip(excl.frames, results[i].frames):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+        assert excl.stats.sparse_pixels == results[i].stats.sparse_pixels
+        assert excl.stats.reference_renders == \
+            results[i].stats.reference_renders
+
+
+def test_per_session_hole_cap_override_isolated(small_model):
+    """A session's hole_cap override (smaller than the engine capacity)
+    triggers ITS dense fallback only, bit-matching an exclusive engine
+    built at that cap; the neighbour at full capacity is untouched."""
+    model, params = small_model
+    cam = rays.Camera.square(32)
+    hw = cam.height * cam.width
+    traj_a, traj_b = _trajs(2, 4, step_deg=8.0)
+    base = RenderConfig(camera=cam, window=2, grid_res=32, channels=4,
+                        decoder="direct", num_samples=16, num_slots=2)
+    r = api.make_renderer(base, model=model, params=params)
+
+    # find session A's real hole regime, then cap it below that
+    probe = r.render(RenderRequest(poses=tuple(traj_a)))
+    max_holes = int(max(probe.stats.hole_fractions) * hw)
+    assert max_holes > 1, "fixture must disocclude something"
+    tight = max(1, max_holes // 2)
+
+    reqs = [RenderRequest(poses=tuple(traj_a), hole_cap=tight),
+            RenderRequest(poses=tuple(traj_b))]
+    results, _ = r.serve(reqs, num_slots=2)
+    # A fell back to dense at least once (stats count full frames)
+    assert results[0].stats.sparse_pixels > sum(
+        int(f * hw) for f in results[0].stats.hole_fractions)
+    # ... bit-matching the exclusive engine at the same tight cap
+    excl_a = r.render(RenderRequest(poses=tuple(traj_a), hole_cap=tight))
+    for a, b in zip(excl_a.frames, results[0].frames):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    # the neighbour kept the sparse path and full-capacity output
+    excl_b = r.render(RenderRequest(poses=tuple(traj_b)))
+    for a, b in zip(excl_b.frames, results[1].frames):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    assert results[1].stats.sparse_pixels == sum(
+        int(f * hw) for f in results[1].stats.hole_fractions)
+
+
+def test_override_outside_engine_capacity_rejected(renderer):
+    traj = pipeline.orbit_trajectory(2, step_deg=1.0)
+    with pytest.raises(ValueError):
+        renderer.serve([RenderRequest(poses=tuple(traj), window=99)])
+    cap = renderer.pipeline.serve_engine_for(
+        renderer.config.replace(num_slots=renderer.config.num_slots)
+    ).engine.hole_cap
+    with pytest.raises(ValueError):
+        renderer.serve([RenderRequest(poses=tuple(traj), hole_cap=cap + 1)])
+
+
+# ---------------------------------------------------------------------------
+# config-keyed engine caches (the stale-cache fix)
+# ---------------------------------------------------------------------------
+
+
+def test_engine_caches_keyed_on_full_config(renderer):
+    """Same num_slots + different window/hole_cap must be DIFFERENT serve
+    engines (the pre-config cache keyed on num_slots alone and went
+    stale); equal configs share one engine."""
+    p = renderer.pipeline
+    cfg = renderer.config
+    a = p.serve_engine_for(cfg.replace(num_slots=2))
+    b = p.serve_engine_for(cfg.replace(num_slots=2))
+    assert a is b
+    c = p.serve_engine_for(cfg.replace(num_slots=2, window=1))
+    d = p.serve_engine_for(cfg.replace(num_slots=2, hole_cap=128))
+    assert a is not c and a is not d and c is not d
+    assert c.window == 1 and d.engine.hole_cap == 128
+    # device engines: same contract
+    e1 = p.device_engine_for(cfg)
+    e2 = p.device_engine_for(cfg.replace(hole_cap=128))
+    assert e1 is not e2 and p.device_engine_for(cfg) is e1
+
+
+def test_render_request_override_uses_cached_variant_engine(renderer):
+    traj = pipeline.orbit_trajectory(2, step_deg=1.0)
+    renderer.render(RenderRequest(poses=tuple(traj), window=1))
+    eng = renderer.pipeline.device_engine_for(
+        renderer.config.replace(window=1))
+    calls = eng.num_window_calls
+    renderer.render(RenderRequest(poses=tuple(traj), window=1))
+    assert eng.num_window_calls == calls + 2  # reused, not rebuilt

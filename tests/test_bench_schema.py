@@ -12,7 +12,7 @@ VARIANT_KEYS = {"wall_s_cold", "wall_s_warm", "s_per_frame_cold",
                 "s_per_frame_warm", "fps_warm", "hole_fraction",
                 "mlp_work_fraction", "reference_renders"}
 CONFIG_KEYS = {"frames", "res", "window", "grid_res", "num_samples",
-               "hole_cap", "smoke"}
+               "hole_cap", "smoke", "config_fingerprint"}
 MS_SEQ_KEYS = {"wall_s_cold", "wall_s_warm", "aggregate_fps_cold",
                "aggregate_fps_warm"}
 MS_BATCH_KEYS = MS_SEQ_KEYS | {"ticks", "per_session_warm"}
@@ -27,6 +27,10 @@ def _load():
 def test_single_session_schema_and_gates():
     data = _load()
     assert CONFIG_KEYS <= set(data["config"])
+    # the active RenderConfig digest: perf numbers are traceable to the
+    # exact compile surface that produced them
+    fp = data["config"]["config_fingerprint"]
+    assert isinstance(fp, str) and len(fp) == 12
     for variant in ("host_loop", "device_engine"):
         assert VARIANT_KEYS <= set(data[variant]), variant
     # standing parity gates: the device engine tracks the seed host loop
@@ -42,6 +46,10 @@ def test_multi_session_schema_and_gates():
         "BENCH_render.json lost the multi-session serving baseline"
     ms = data["multi_session"]
     assert ms["sessions"] >= 2
+    # the serving baseline records which admission policy produced it
+    # (FIFO is the bit-parity-gated baseline) and its config fingerprint
+    assert ms["policy"] == "fifo"
+    assert isinstance(ms["config_fingerprint"], str)
     assert MS_SEQ_KEYS <= set(ms["sequential"])
     assert MS_BATCH_KEYS <= set(ms["batched"])
     per_session = ms["batched"]["per_session_warm"]

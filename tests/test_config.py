@@ -1,0 +1,152 @@
+"""The unified RenderConfig/RenderRequest/RenderResult surface: value
+hashing (jit-static / cache-key semantics), fingerprint stability, request
+validation, and the legacy-kwarg deprecation shims (warning + bit-identical
+frames vs the new API)."""
+import dataclasses
+
+import jax
+import numpy as np
+import pytest
+
+from repro.core import engine, pipeline
+from repro.core.config import RenderConfig, RenderRequest, RenderStats
+from repro.nerf import rays
+from repro.serve.render_engine import RenderServeEngine, RenderSession
+
+
+def test_config_is_frozen_and_value_hashable():
+    a = RenderConfig(res=32, window=4)
+    b = RenderConfig(res=32, window=4)
+    c = RenderConfig(res=32, window=8)
+    assert a == b and hash(a) == hash(b)
+    assert a != c
+    with pytest.raises(dataclasses.FrozenInstanceError):
+        a.window = 2
+    # usable directly as a dict key (the engine-cache contract)
+    cache = {a: "engine"}
+    assert cache[b] == "engine"
+    assert c not in cache
+
+
+def test_config_works_as_jit_static_arg():
+    scaled = jax.jit(lambda x, cfg: x * cfg.window, static_argnums=1)
+    out = scaled(np.ones(3, np.float32), RenderConfig(res=32, window=4))
+    np.testing.assert_array_equal(np.asarray(out), np.full(3, 4.0, np.float32))
+    # a different config is a different static arg (retrace, new constant)
+    out8 = scaled(np.ones(3, np.float32), RenderConfig(res=32, window=8))
+    np.testing.assert_array_equal(np.asarray(out8),
+                                  np.full(3, 8.0, np.float32))
+
+
+def test_config_fingerprint_stable_and_sensitive():
+    a = RenderConfig(res=32, window=4)
+    assert a.fingerprint() == RenderConfig(res=32, window=4).fingerprint()
+    # resolved camera and res-derived camera fingerprint identically
+    assert a.fingerprint() == a.resolved().fingerprint()
+    # any compile-relevant knob flips the fingerprint
+    for change in (dict(window=8), dict(hole_cap=64), dict(engine="host"),
+                   dict(num_slots=2), dict(backend="streaming"),
+                   dict(phi_deg=4.0)):
+        assert a.replace(**change).fingerprint() != a.fingerprint(), change
+
+
+def test_config_validation():
+    with pytest.raises(ValueError):
+        RenderConfig(mode="sideways")
+    with pytest.raises(ValueError):
+        RenderConfig(engine="gpu")
+    with pytest.raises(ValueError):
+        RenderConfig(window=0)
+    with pytest.raises(ValueError):
+        RenderConfig(hole_cap=0)  # 0 must not alias "use the default"
+    with pytest.raises(ValueError):
+        RenderConfig(hole_cap=-5)
+    with pytest.raises(ValueError):
+        RenderRequest(poses=())
+    with pytest.raises(ValueError):
+        RenderRequest(poses=(np.eye(4),), window=0)
+    with pytest.raises(ValueError):
+        RenderRequest(poses=(np.eye(4),), hole_cap=0)
+
+
+def test_request_override_folding():
+    cfg = RenderConfig(res=32, window=4, hole_cap=128)
+    req = RenderRequest(poses=(np.eye(4),), window=2)
+    assert cfg.apply_request(req) == cfg.replace(window=2)
+    # no overrides -> the config object itself (same cache key)
+    assert cfg.apply_request(RenderRequest(poses=(np.eye(4),))) is cfg
+
+
+@pytest.fixture(scope="module")
+def small_model(scene):
+    from repro.nerf import models
+
+    model, _ = models.make_model("dvgo", grid_res=32, channels=4,
+                                 decoder="direct", num_samples=16)
+    return model, model.init_baked(scene)
+
+
+def test_legacy_kwargs_warn_and_match_config_api(small_model):
+    """The deprecation shims: old-kwarg construction of all three engines
+    emits DeprecationWarning and renders bit-identical frames to the new
+    config API on a 2-window smoke."""
+    model, params = small_model
+    cam = rays.Camera.square(32)
+    traj = pipeline.orbit_trajectory(4, step_deg=1.0)  # 2 windows at w=2
+    cfg = RenderConfig(camera=cam, window=2)
+
+    new = pipeline.CiceroRenderer(model, params, config=cfg)
+    frames_new, stats_new = new.render_trajectory(traj)
+
+    with pytest.warns(DeprecationWarning):
+        old = pipeline.CiceroRenderer(model, params, cam, window=2)
+    frames_old, stats_old = old.render_trajectory(traj)
+    assert len(frames_old) == len(frames_new) == 4
+    for a, b in zip(frames_old, frames_new):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    assert stats_old.sparse_pixels == stats_new.sparse_pixels
+
+    with pytest.warns(DeprecationWarning):
+        old_eng = engine.DeviceSparwEngine(model, params, cam, window=2)
+    assert old_eng.config == engine.DeviceSparwEngine(
+        model, params, config=cfg).config
+
+    with pytest.warns(DeprecationWarning):
+        old_serve = RenderServeEngine(model, params, cam, num_slots=2,
+                                      window=2)
+    sessions = [RenderSession(sid=0, poses=list(traj))]
+    old_serve.run(sessions)
+    for a, b in zip(sessions[0].frames, frames_new):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_mixing_config_and_legacy_kwargs_is_an_error(small_model):
+    model, params = small_model
+    cam = rays.Camera.square(32)
+    cfg = RenderConfig(camera=cam, window=2)
+    with pytest.raises(TypeError):
+        pipeline.CiceroRenderer(model, params, cam, config=cfg)
+    with pytest.raises(TypeError):
+        pipeline.CiceroRenderer(model, params, window=2, config=cfg)
+    with pytest.raises(TypeError):
+        pipeline.CiceroRenderer(model, params)  # neither style
+
+
+def test_renderer_knobs_are_read_only(small_model):
+    """Mutating a renderer's compile knobs was the stale-engine hazard;
+    the config API closes it by construction."""
+    model, params = small_model
+    r = pipeline.CiceroRenderer(model, params,
+                                config=RenderConfig(res=32, window=2))
+    with pytest.raises(AttributeError):
+        r.window = 8
+    with pytest.raises(AttributeError):
+        r.hole_cap = 64
+
+
+def test_stats_shared_type_reexported():
+    # RenderStats moved to core.config; the historical import paths hold
+    from repro.core.engine import RenderStats as EngineStats
+    from repro.core.pipeline import RenderStats as PipelineStats
+
+    assert EngineStats is RenderStats and PipelineStats is RenderStats

@@ -6,6 +6,7 @@ import numpy as np
 import pytest
 
 from repro.core import engine, pipeline
+from repro.core.config import RenderConfig
 from repro.nerf import models, rays
 from repro.utils import psnr
 
@@ -19,11 +20,11 @@ def test_device_engine_matches_host_loop(baked_model, small_cam, traj):
     """The jitted fixed-capacity hole path reproduces the seed host-loop
     renderer (per-frame PSNR >= 60 dB) with identical work statistics."""
     model, params = baked_model
-    host = pipeline.CiceroRenderer(model, params, small_cam, window=3,
-                                   engine="host")
+    host = pipeline.CiceroRenderer(model, params, config=RenderConfig(
+        camera=small_cam, window=3, engine="host"))
     fh, sh = host.render_trajectory(traj)
-    dev = pipeline.CiceroRenderer(model, params, small_cam, window=3,
-                                  engine="device")
+    dev = pipeline.CiceroRenderer(model, params, config=RenderConfig(
+        camera=small_cam, window=3, engine="device"))
     fd, sd = dev.render_trajectory(traj)
     assert len(fh) == len(fd) == len(traj)
     for a, b in zip(fh, fd):
@@ -37,8 +38,8 @@ def test_device_engine_matches_host_loop(baked_model, small_cam, traj):
 def test_window_is_single_jitted_call(baked_model, small_cam, traj):
     """One warp window == one jitted invocation (the counter assertion)."""
     model, params = baked_model
-    dev = pipeline.CiceroRenderer(model, params, small_cam, window=3,
-                                  engine="device")
+    dev = pipeline.CiceroRenderer(model, params, config=RenderConfig(
+        camera=small_cam, window=3, engine="device"))
     dev.render_trajectory(traj)  # 6 frames / window 3
     assert dev.device_engine.num_window_calls == 2
 
@@ -48,7 +49,8 @@ def test_window_render_has_zero_host_syncs(baked_model, small_cam, traj):
     compiled window program under ``jax.transfer_guard('disallow')`` must
     not raise (any implicit device<->host sync would)."""
     model, params = baked_model
-    eng = engine.DeviceSparwEngine(model, params, small_cam, window=3)
+    eng = engine.DeviceSparwEngine(model, params, config=RenderConfig(
+        camera=small_cam, window=3))
     tgt = jnp.stack(traj[:3])
     ref_pose = traj[0]
     res = eng.render_window(ref_pose, tgt)  # warm-up: trace + compile
@@ -63,14 +65,14 @@ def test_hole_capacity_overflow_falls_back_dense(baked_model, small_cam, traj):
     """hole_cap below the true hole count triggers the dense fallback and
     still bit-matches the host renderer (output identical, work differs)."""
     model, params = baked_model
-    host = pipeline.CiceroRenderer(model, params, small_cam, window=3,
-                                   engine="host")
+    host = pipeline.CiceroRenderer(model, params, config=RenderConfig(
+        camera=small_cam, window=3, engine="host"))
     fh, sh = host.render_trajectory(traj)
     true_max_holes = int(max(sh.hole_fractions) *
                          small_cam.height * small_cam.width)
     assert true_max_holes > 8  # the trajectory does disocclude something
-    dev = pipeline.CiceroRenderer(model, params, small_cam, window=3,
-                                  engine="device", hole_cap=8)
+    dev = pipeline.CiceroRenderer(model, params, config=RenderConfig(
+        camera=small_cam, window=3, engine="device", hole_cap=8))
     fd, sd = dev.render_trajectory(traj)
     for a, b in zip(fh, fd):
         assert float(psnr(a, b)) >= 60.0
@@ -82,11 +84,12 @@ def test_hole_capacity_overflow_falls_back_dense(baked_model, small_cam, traj):
 
 def test_overflow_flag_reported(baked_model, small_cam, traj):
     model, params = baked_model
-    eng = engine.DeviceSparwEngine(model, params, small_cam, window=3,
-                                   hole_cap=8)
+    eng = engine.DeviceSparwEngine(model, params, config=RenderConfig(
+        camera=small_cam, window=3, hole_cap=8))
     res = eng.render_window(traj[0], jnp.stack(traj[:3]))
     assert bool(res.overflowed)
-    big = engine.DeviceSparwEngine(model, params, small_cam, window=3)
+    big = engine.DeviceSparwEngine(model, params, config=RenderConfig(
+        camera=small_cam, window=3))
     res2 = big.render_window(traj[0], jnp.stack(traj[:3]))
     assert not bool(res2.overflowed)
     np.testing.assert_array_equal(np.asarray(res.hole_counts),
@@ -102,10 +105,11 @@ def test_streaming_backend_matches_reference(scene, traj):
     str_model, _ = models.make_model("dvgo", backend="streaming",
                                      stream_capacity=256, **kw)
     cam = rays.Camera.square(24)
-    fr, _ = pipeline.CiceroRenderer(ref_model, params, cam,
-                                    window=2).render_trajectory(traj[:4])
-    fs, _ = pipeline.CiceroRenderer(str_model, params, cam,
-                                    window=2).render_trajectory(traj[:4])
+    cfg = RenderConfig(camera=cam, window=2)
+    fr, _ = pipeline.CiceroRenderer(ref_model, params,
+                                    config=cfg).render_trajectory(traj[:4])
+    fs, _ = pipeline.CiceroRenderer(str_model, params,
+                                    config=cfg).render_trajectory(traj[:4])
     for a, b in zip(fr, fs):
         assert float(psnr(a, b)) >= 60.0
         np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=1e-4)
@@ -127,7 +131,8 @@ def test_prepare_streaming_caches_mv_table(scene):
 def test_compact_holes_matches_nonzero(baked_model, small_cam):
     """The cumsum compaction is the in-graph np.nonzero: same ids, order."""
     model, params = baked_model
-    eng = engine.DeviceSparwEngine(model, params, small_cam, window=2)
+    eng = engine.DeviceSparwEngine(model, params, config=RenderConfig(
+        camera=small_cam, window=2))
     rng = np.random.RandomState(0)
     hflat = jnp.asarray(rng.rand(small_cam.height * small_cam.width) < 0.07)
     idx, count = jax.jit(eng._compact_holes)(hflat)

@@ -1,12 +1,13 @@
 """Multi-session SpaRW serving engine: batched-vs-sequential parity, ragged
 session lifetimes (slot reuse), per-session overflow isolation, and the
-zero-host-sync-per-tick contract."""
+zero-host-sync-per-tick contract (including mixed per-session windows)."""
 import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
 
 from repro.core import pipeline
+from repro.core.config import RenderConfig
 from repro.nerf import models, rays, scenes
 from repro.serve.render_engine import RenderServeEngine, RenderSession
 from repro.utils import psnr
@@ -24,6 +25,10 @@ def cam():
     return rays.Camera.square(32)
 
 
+def _cfg(cam, **kw):
+    return RenderConfig(camera=cam, **kw)
+
+
 def _trajs(n_sessions, n_frames, step_deg=1.0):
     return [pipeline.orbit_trajectory(n_frames, step_deg=step_deg,
                                       phase_deg=25.0 * i)
@@ -31,8 +36,8 @@ def _trajs(n_sessions, n_frames, step_deg=1.0):
 
 
 def _single_session_frames(model, params, cam, traj, window, hole_cap=None):
-    r = pipeline.CiceroRenderer(model, params, cam, window=window,
-                                engine="device", hole_cap=hole_cap)
+    r = pipeline.CiceroRenderer(
+        model, params, config=_cfg(cam, window=window, hole_cap=hole_cap))
     return r.render_trajectory(traj)
 
 
@@ -75,7 +80,8 @@ def test_batched_matches_sequential_single_session(small_model, cam):
     work statistics) an exclusive single-session engine would produce."""
     model, params = small_model
     trajs = _trajs(3, 5)
-    renderer = pipeline.CiceroRenderer(model, params, cam, window=2)
+    renderer = pipeline.CiceroRenderer(model, params,
+                                       config=_cfg(cam, window=2))
     frames_b, stats_b, metrics = renderer.render_trajectories(trajs)
     assert metrics["total_frames"] == 15
     assert metrics["ticks"] == 3  # ceil(5/2) windows, all sessions in step
@@ -97,7 +103,8 @@ def test_ragged_session_lifetimes_and_slot_reuse(small_model, cam):
     lengths = [5, 2, 7, 3]
     trajs = [pipeline.orbit_trajectory(n, step_deg=1.0, phase_deg=20.0 * i)
              for i, n in enumerate(lengths)]
-    serve = RenderServeEngine(model, params, cam, num_slots=2, window=2)
+    serve = RenderServeEngine(model, params,
+                              config=_cfg(cam, num_slots=2, window=2))
     sessions = [RenderSession(sid=i, poses=list(t))
                 for i, t in enumerate(trajs)]
     metrics = serve.run(sessions)
@@ -130,8 +137,8 @@ def test_overflow_isolation_between_sessions(small_model, cam):
     cap = max(quiet_max + 8, (quiet_max + hot_max) // 2)
     assert cap < hot_max
 
-    serve = RenderServeEngine(model, params, cam, num_slots=2, window=2,
-                              hole_cap=cap)
+    serve = RenderServeEngine(
+        model, params, config=_cfg(cam, num_slots=2, window=2, hole_cap=cap))
     sessions = [RenderSession(sid=0, poses=list(hot)),
                 RenderSession(sid=1, poses=list(quiet))]
     serve.run(sessions)
@@ -156,16 +163,20 @@ def test_overflow_isolation_between_sessions(small_model, cam):
 def test_tick_has_zero_host_syncs(small_model, cam):
     """A serving tick is dispatch-only: after warm-up, `step()` runs under
     ``jax.transfer_guard('disallow')`` — any device→host sync inside the
-    tick would raise. Frames/stats materialize only in `finalize()`."""
+    tick would raise. Frames/stats materialize only in `finalize()`.
+    Exercised on a MIXED-window batch: the per-session win_lens/caps
+    arrays are staged at admit, so a steady-state ragged tick is still
+    pure dispatch."""
     model, params = small_model
     trajs = _trajs(2, 6)
-    serve = RenderServeEngine(model, params, cam, num_slots=2, window=2)
-    serve.submit([RenderSession(sid=i, poses=list(t))
-                  for i, t in enumerate(trajs)])
-    assert serve.step()  # warm-up tick: trace + compile
+    serve = RenderServeEngine(model, params,
+                              config=_cfg(cam, num_slots=2, window=2))
+    serve.submit([RenderSession(sid=0, poses=list(trajs[0]), window=1),
+                  RenderSession(sid=1, poses=list(trajs[1]))])
+    assert serve.step()  # warm-up tick: trace + compile + mask staging
     jax.block_until_ready(serve._last_result.frames)
     with jax.transfer_guard("disallow"):
-        assert serve.step()  # steady-state tick: pure dispatch
+        assert serve.step()  # steady-state ragged tick: pure dispatch
         jax.block_until_ready(serve._last_result.frames)
     while serve.step():
         pass
@@ -177,14 +188,19 @@ def test_tick_has_zero_host_syncs(small_model, cam):
 
 def test_single_compile_for_engine_lifetime(small_model, cam):
     """Fixed slots + pose padding keep the batch shape static: ragged
-    trajectories and idle slots reuse the same compiled program (no
-    per-tick retrace)."""
+    trajectories, idle slots AND mixed per-session window/hole_cap
+    overrides all reuse the same compiled program (win_lens/caps are
+    traced inputs — no per-tick or per-session retrace)."""
     model, params = small_model
     trajs = [pipeline.orbit_trajectory(n, step_deg=1.0, phase_deg=10.0 * n)
-             for n in (5, 3)]  # ragged + an idle slot at the end
-    serve = RenderServeEngine(model, params, cam, num_slots=3, window=2)
-    sessions = [RenderSession(sid=i, poses=list(t))
-                for i, t in enumerate(trajs)]
+             for n in (5, 3, 4)]  # ragged + an idle slot at the end
+    serve = RenderServeEngine(model, params,
+                              config=_cfg(cam, num_slots=3, window=2))
+    sessions = [RenderSession(sid=0, poses=list(trajs[0])),
+                RenderSession(sid=1, poses=list(trajs[1]), window=1),
+                RenderSession(sid=2, poses=list(trajs[2]),
+                              hole_cap=serve.engine.hole_cap // 2)]
     serve.run(sessions)
+    assert all(s.done for s in sessions)
     compiles = serve.engine._windows_jit._cache_size()
     assert compiles == 1, f"expected 1 compiled batch program, got {compiles}"

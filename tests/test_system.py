@@ -17,7 +17,9 @@ def traj():
 @pytest.fixture(scope="module")
 def rendered(baked_model, small_cam, traj):
     model, params = baked_model
-    r = pipeline.CiceroRenderer(model, params, small_cam, window=4)
+    r = pipeline.CiceroRenderer(
+        model, params, config=pipeline.RenderConfig(camera=small_cam,
+                                                    window=4))
     frames, stats = r.render_trajectory(traj)
     baseline = r.render_baseline(traj)
     return r, frames, stats, baseline
@@ -43,11 +45,13 @@ def test_temporal_mode_degrades(baked_model, small_cam, traj):
     """TEMP-N (warp from previous frames) accumulates error vs off-trajectory
     references (Fig. 16: TEMP-16 is the worst variant)."""
     model, params = baked_model
-    off = pipeline.CiceroRenderer(model, params, small_cam, window=4,
-                                  mode="offtraj")
+    off = pipeline.CiceroRenderer(
+        model, params, config=pipeline.RenderConfig(camera=small_cam,
+                                                    window=4, mode="offtraj"))
     f_off, _ = off.render_trajectory(traj)
-    tmp = pipeline.CiceroRenderer(model, params, small_cam, window=4,
-                                  mode="temporal")
+    tmp = pipeline.CiceroRenderer(
+        model, params, config=pipeline.RenderConfig(camera=small_cam,
+                                                    window=4, mode="temporal"))
     f_tmp, _ = tmp.render_trajectory(traj)
     base = off.render_baseline(traj)
     p_off = np.mean([float(psnr(f, b)) for f, b in zip(f_off, base)])
