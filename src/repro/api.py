@@ -19,12 +19,19 @@ One declarative surface over the whole stack (config → renderer → serving):
 
 :class:`~repro.core.config.RenderConfig` carries every compile-relevant
 knob (scene, camera, warp window, hole capacity, backend, engine, slots,
-model shape); it is frozen and hashable, so the renderer caches one
-compiled engine per distinct config — including per-request
-``window``/``hole_cap`` overrides — and can never hand back a stale
-program. ``policy`` selects the serving admission policy
-(:mod:`repro.serve.policies`): FIFO (default, bit-identical to pre-policy
-serving) or priority/deadline-aware admission.
+model shape, session sharding, Pallas interpret mode); it is frozen and
+hashable, so the renderer caches one compiled engine per distinct config
+— including per-request ``window``/``hole_cap`` overrides — in a small
+LRU and can never hand back a stale program. ``policy`` selects the
+serving admission policy (:mod:`repro.serve.policies`): FIFO (default,
+bit-identical to pre-policy serving) or priority/deadline-aware
+admission.
+
+Multi-device serving: ``RenderConfig(shard=ShardConfig(num_devices=D))``
+lays the session axis of the flat ray-batch core
+(:mod:`repro.core.raybatch`) over D accelerators — sessions are pinned
+whole to devices, so the tick's segment scatters never cross a device
+boundary, and a single-device config is bit-identical to today.
 
 This module is the supported entry point for benchmarks, examples and
 tests; the engine classes underneath (`CiceroRenderer`,
@@ -43,6 +50,7 @@ from repro.core.config import (  # noqa: F401 (facade re-exports)
     RenderRequest,
     RenderResult,
     RenderStats,
+    ShardConfig,
 )
 from repro.nerf import models, scenes
 from repro.serve.policies import (  # noqa: F401 (facade re-exports)
@@ -116,12 +124,25 @@ def make_renderer(config: RenderConfig, *,
     if (model is None) != (params is None):
         raise TypeError("make_renderer: pass model and params together "
                         "(or neither)")
+    if model is not None and config.pallas_interpret is not None \
+            and getattr(model.cfg, "pallas_interpret", None) \
+            != config.pallas_interpret:
+        # an explicit Pallas mode must reach the kernels even for a shared
+        # prebuilt model — rebind the model config rather than silently
+        # honoring the flag only on the model-construction path (the fresh
+        # NerfModel re-jits lazily; params are reused as-is)
+        import dataclasses as _dc
+
+        model = models.NerfModel(
+            _dc.replace(model.cfg, pallas_interpret=config.pallas_interpret),
+            scene=model.scene)
     if model is None:
         scene = scenes.make_scene(config.scene)
         model, _ = models.make_model(
             config.model_kind, grid_res=config.grid_res,
             channels=config.channels, decoder=config.decoder,
             num_samples=config.num_samples, backend=config.backend,
-            stream_capacity=config.stream_capacity)
+            stream_capacity=config.stream_capacity,
+            pallas_interpret=config.pallas_interpret)
         params = model.init_baked(scene)
     return Renderer(config, model, params)

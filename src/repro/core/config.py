@@ -7,10 +7,16 @@ re-declared the same loose kwargs (``window``, ``phi_deg``, ``hole_cap``,
 frozen dataclasses the whole stack compiles against:
 
 * :class:`RenderConfig` — the *compile-relevant* knobs (scene, camera,
-  window, phi, hole cap, backend, engine, slots, model shape). Frozen,
-  hashable by value, usable as a ``jax.jit`` static argument and as an
-  engine-cache key: two configs compare equal iff they compile to the same
-  device program, so caching an engine per config can never go stale.
+  window, phi, hole cap, backend, engine, slots, model shape, sharding,
+  Pallas interpret mode). Frozen, hashable by value, usable as a
+  ``jax.jit`` static argument and as an engine-cache key: two configs
+  compare equal iff they compile to the same device program, so caching an
+  engine per config can never go stale.
+* :class:`ShardConfig` — multi-device layout of the session axis: the flat
+  ray-batch core (:mod:`repro.core.raybatch`) lays a
+  ``jax.sharding.NamedSharding`` over the leading session dimension, so S
+  concurrent client sessions split across ``num_devices`` accelerators
+  with no cross-device scatter (segment ids are session-major).
 * :class:`RenderRequest` — one client session's *workload*: the pose
   trajectory plus per-session overrides (``window``, ``hole_cap``) and
   serving metadata (``priority``, ``deadline_ms``). Frozen; hashable by
@@ -81,6 +87,38 @@ class RenderStats:
 
 
 # ---------------------------------------------------------------------------
+# ShardConfig — multi-device session sharding
+# ---------------------------------------------------------------------------
+
+
+@dataclass(frozen=True)
+class ShardConfig:
+    """Lay the session axis of the flat ray-batch core over devices.
+
+    ``num_devices`` accelerators each own a contiguous block of session
+    slots: the flat ray batch is session-major, so sharding the leading
+    session axis pins every session's reference rays, hole samples and
+    output frames to one device — the segment-scatter back to frames never
+    crosses a device boundary. ``num_devices=1`` (and ``shard=None`` on
+    :class:`RenderConfig`) is bit-identical to the unsharded engine.
+    """
+
+    num_devices: int = 1
+    axis_name: str = "sessions"
+
+    def __post_init__(self) -> None:
+        if self.num_devices < 1:
+            raise ValueError(
+                f"num_devices must be >= 1, got {self.num_devices}")
+        if not self.axis_name:
+            raise ValueError("axis_name must be a non-empty string")
+
+    @property
+    def enabled(self) -> bool:
+        return self.num_devices > 1
+
+
+# ---------------------------------------------------------------------------
 # RenderConfig — the compile surface
 # ---------------------------------------------------------------------------
 
@@ -111,7 +149,18 @@ class RenderConfig:
     mode: str = "offtraj"       # offtraj | temporal (TEMP-N baseline)
     engine: str = "device"      # device | host (seed reference loop)
     num_slots: int = 4          # serving: concurrent session slots
-    ray_chunk: int = 1 << 14    # lax.map chunk for full-frame renders
+    # lax.map chunk over the flat ray batch. This is the cache-blocking
+    # size of the flat core: the NeRF stages stream [ray_chunk]-ray tiles
+    # whose intermediates stay resident (measured on the CPU dev box:
+    # 4096 runs a 4-session tick ~2x faster than 1<<14, which spills).
+    # Raise it on real accelerators with large VMEM/HBM bandwidth.
+    ray_chunk: int = 4096
+    shard: Optional[ShardConfig] = None  # multi-device session sharding
+    # Pallas kernel execution mode: None = auto (interpret only where no
+    # accelerator backend exists, i.e. CPU); True/False force it. The
+    # resolved value enters the benchmark config fingerprint via
+    # :meth:`resolved_pallas_interpret`.
+    pallas_interpret: Optional[bool] = None
 
     # --- model shape (what repro.api.make_renderer builds) ----------------
     model_kind: str = "dvgo"
@@ -134,6 +183,12 @@ class RenderConfig:
         if self.hole_cap is not None and self.hole_cap < 1:
             raise ValueError(f"hole_cap must be >= 1 (or None for the "
                              f"default), got {self.hole_cap}")
+        if self.shard is not None and self.shard.enabled \
+                and self.num_slots % self.shard.num_devices != 0:
+            raise ValueError(
+                f"num_slots={self.num_slots} must be divisible by "
+                f"shard.num_devices={self.shard.num_devices} (sessions are "
+                f"pinned whole to devices — no session straddles a shard)")
 
     # ------------------------------------------------------------------
     def resolved(self) -> "RenderConfig":
@@ -150,6 +205,15 @@ class RenderConfig:
         artifacts and usable as a cross-process cache key. Equal configs
         have equal fingerprints; any field change flips it."""
         return hashlib.sha1(repr(self.resolved()).encode()).hexdigest()[:12]
+
+    def resolved_pallas_interpret(self) -> bool:
+        """The Pallas execution mode this config actually runs with:
+        ``pallas_interpret`` if set, else auto (interpret only where no
+        accelerator backend exists). Recorded by the benchmark harness so
+        perf numbers are traceable to kernel-vs-interpreter execution."""
+        from repro.kernels.common import resolve_interpret
+
+        return resolve_interpret(self.pallas_interpret)
 
     def apply_request(self, request: "RenderRequest") -> "RenderConfig":
         """Fold a request's per-session compile-relevant overrides in."""

@@ -8,37 +8,46 @@ kernels. This module is the device-resident replacement — the architecture
 Potamoi/RT-NeRF argue for: keep the whole warp→gather→MLP→composite chain on
 the accelerator with no per-frame host synchronization.
 
-Design:
+Design (the **flat ray-batch execution core**, :mod:`repro.core.raybatch`):
 
-* ``render_window`` is ONE jitted call per warp window: reference render →
-  N-way batched warp (``vmap`` over the window's target poses) → fixed-
-  capacity hole compaction → one batched sparse render of all N frames'
-  holes → combine. Zero host syncs inside a window (tested with a transfer
-  guard); stats leave the device only after the whole trajectory has been
-  dispatched.
+* ``render_windows`` renders S concurrent sessions' warp windows as ONE
+  jitted call built from flat cross-session stages instead of a
+  per-session pipeline ``vmap``-ed over a leading S axis:
+
+  ① every session's reference rays pack into one ``[S*HW]`` flat batch and
+  render through ONE fused NeRF call; ② all ``S×N`` target frames warp in
+  one flat scatter pass (:func:`repro.core.sparw.warp_frames_flat`);
+  ③ hole compaction emits flat segment offsets
+  (:func:`repro.core.sparw.compact_holes_flat`) into a fixed-capacity
+  ``[S*N*cap]`` flat hole batch; ④ that batch renders through ONE fused
+  sparse NeRF call and segment-scatters back to ``[S, N, H, W, 3]``
+  frames. The Pallas kernels (``gather_features_streaming`` →
+  ``nerf_mlp``) therefore see large contiguous inputs — one RIT build and
+  one kernel launch per stage per tick, not S small vmapped ones.
+
+* ``render_window`` (single session) is the same program at S=1 — an
+  exclusive run and a batched run execute identical per-ray code, which is
+  what makes the serving engine's bit-parity contract structural.
+
 * Hole handling uses **fixed-capacity compaction**: hole pixel indices are
   compacted (deterministic cumsum scatter, no ``nonzero``) into a static
-  ``[hole_cap]`` ray batch per frame, so every window compiles to the same
-  program regardless of how many pixels disoccluded. If any frame overflows
-  the capacity the window falls back to dense re-renders of the target
-  frames (mirroring the RIT overflow fallback in the streaming gather) —
-  the output is identical either way, only the work changes.
-* Full-frame renders run through ``lax.scan`` over fixed-size ray chunks
-  (static shapes, bounded memory) instead of a host chunk loop.
-* ``render_windows`` adds a leading **session axis**: S concurrent client
-  trajectories' windows (one reference pose each) render as ONE jitted
-  call — ``vmap`` over per-session reference frames and hole compaction,
-  with the model params (and the streaming backend's MVoxel table)
-  broadcast so one copy serves every session. The overflow→dense fallback
-  is isolated per session, and per-session ``win_lens``/``caps`` inputs
-  let ragged windows (sessions with different ``window``/``hole_cap``
-  overrides) batch into the same compiled program. This is the device half
-  of the multi-session serving engine (:mod:`repro.serve.render_engine`).
-* With ``NerfModel`` ``backend="streaming"`` the NeRF evaluation inside the
-  window runs through the Pallas kernels end-to-end
-  (``ops.gather_features_streaming`` + ``ops.nerf_mlp``); the MVoxel halo
-  table is built once per params (``prepare_streaming``) and enters the
-  jitted window function as a regular input.
+  ``[hole_cap]`` ray batch per frame. A session whose window overflows the
+  capacity takes a dense re-render of its frames (the RIT-overflow
+  discipline) in isolation; its neighbours keep the sparse-path output
+  bit-for-bit. Per-session ``win_lens``/``caps`` are traced inputs, so
+  ragged windows batch into the same compiled program.
+
+* **Multi-device session sharding** (``RenderConfig.shard``): the flat
+  layout is session-major, so laying a ``NamedSharding`` over the leading
+  session axis pins each session's rays, holes and frames to one device —
+  no scatter crosses a device boundary. ``shard=None`` (or one device) is
+  bit-identical to the unsharded engine.
+
+* With ``NerfModel`` ``backend="streaming"`` the NeRF evaluation runs
+  through the Pallas kernels end-to-end; the MVoxel halo table is built
+  once per params (``prepare_streaming``) and broadcast across sessions,
+  and the flat batch carries per-ray *segment ids* so the fused gather
+  keeps exclusive-run RIT capacity per session.
 """
 from __future__ import annotations
 
@@ -48,7 +57,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import schedule, sparw
+from repro.core import raybatch, schedule, sparw
 from repro.core.config import (  # noqa: F401 (RenderStats re-export)
     _UNSET,
     RenderConfig,
@@ -87,11 +96,12 @@ class DeviceSparwEngine:
     ``DeprecationWarning``). ``config.hole_cap`` is the static per-frame
     sparse-ray capacity (default: a quarter of the frame — paper hole
     fractions are 2–6%, so this leaves a wide margin before the dense
-    fallback triggers).
+    fallback triggers). ``config.shard`` lays the session axis of
+    ``render_windows`` over multiple devices.
     """
 
     _LEGACY_DEFAULTS = dict(window=16, phi_deg=None, hole_cap=None,
-                            ray_chunk=1 << 14)
+                            ray_chunk=RenderConfig.ray_chunk)
 
     def __init__(self, model, params: dict, cam: Optional[rays.Camera] = None,
                  window=_UNSET, phi_deg=_UNSET, hole_cap=_UNSET,
@@ -108,12 +118,27 @@ class DeviceSparwEngine:
         hw = self.cam.height * self.cam.width
         self.hole_cap = (int(config.hole_cap) if config.hole_cap is not None
                          else round_up(max(hw // 4, 128), 128))
-        self.ray_chunk = min(config.ray_chunk, hw)
-        # streaming backend: MVoxel table built once here, never per frame
+        # NOT capped at one frame's pixel count: the flat core's whole point
+        # is that a cross-session batch fills one large contiguous chunk
+        # (each call still takes min(ray_chunk, batch) — small batches never
+        # over-pad)
+        self.ray_chunk = int(config.ray_chunk)
+        # streaming backend: MVoxel table built once here, never per frame;
+        # the flat core then tags every ray with its session segment so the
+        # fused gather keeps per-session RIT capacity
         self.params = model.prepare_streaming(params)
+        self._seg_aware = (getattr(model.cfg, "backend", "reference")
+                           == "streaming"
+                           and getattr(model.cfg, "kind", "") == "dvgo")
+        # multi-device session sharding: one mesh per engine lifetime; the
+        # model params (and MVoxel table) are replicated — one logical copy
+        # serves every session on every device
+        self.mesh = raybatch.make_mesh(config.shard)
+        if self.mesh is not None:
+            self.params = jax.device_put(
+                self.params, raybatch.replicated_sharding(self.mesh))
         self.num_window_calls = 0  # jitted window invocations (tests assert)
-        self._window_jit = jax.jit(self._render_window)
-        self._windows_jit = jax.jit(self._render_windows)  # [S]-batched
+        self._windows_jit = jax.jit(self._render_windows)
         # staged full-window/full-cap defaults per (S, N) so a default
         # render_windows call never rebuilds them (and the serving engine's
         # explicit arrays follow the same staging discipline)
@@ -121,126 +146,86 @@ class DeviceSparwEngine:
                                   Tuple[jnp.ndarray, jnp.ndarray]] = {}
 
     # ------------------------------------------------------------------
-    # fully in-graph primitives
+    # fully in-graph primitives (all flat: no per-session vmap)
     # ------------------------------------------------------------------
-    def _render_rays_chunked(self, params: dict, o: jnp.ndarray, d: jnp.ndarray
-                             ) -> Tuple[jnp.ndarray, jnp.ndarray]:
-        """``render_rays`` over [R,3] rays via ``lax.map`` chunks — static
-        shapes (pad + slice), bounded memory, no host loop."""
+    def _render_rays_flat(self, params: dict, o: jnp.ndarray, d: jnp.ndarray,
+                          seg: Optional[jnp.ndarray], num_seg: int,
+                          quantum: int) -> Tuple[jnp.ndarray, jnp.ndarray]:
+        """ONE fused NeRF call over a flat [F,3] cross-session ray batch,
+        chunked via ``lax.map`` — static shapes (pad + slice), bounded
+        memory, no host loop. Chunk-padding rays are tagged with the dump
+        segment ``num_seg`` so they never pollute a session's RIT.
+
+        ``quantum`` is the stage's per-session ray count, and the chunk
+        size is ``min(ray_chunk, ceil(quantum/2))`` — NEVER the whole
+        flat batch, and never a whole per-session stage either. Two
+        invariants make every session's rows bit-identical to its
+        exclusive (S=1) run *by construction*:
+
+        * the chunk body has the same shape at S=1 and S=k (XLA codegen
+          is shape-dependent — differently-shaped bodies may differ in
+          ulps), and
+        * every arm's ``lax.map`` has trip count >= 2 (at quantum/2 the
+          S=1 arm already loops twice), because XLA *elides* single-trip
+          loops and fuses their body into the surrounding graph, which
+          changes the generated code even for an identical body shape.
+
+        Per-ray math is row-parallel, so with both invariants the same
+        compiled loop body processes each ray in every arm. ``ray_chunk``
+        stays the cache-blocking cap on top.
+
+        Scope: the bit-parity guarantee covers the segment-oblivious
+        (reference) backend, whose math is purely per-ray. The streaming
+        backend's RIT is built per chunk, so when ``quantum`` is not a
+        multiple of the chunk size a session's rays can straddle different
+        chunk boundaries at S=1 vs S=k and land in different
+        overflow-fallback sets; its contract is (and since PR 2 always
+        was) *numerical* parity with the reference path, not bitwise.
+        """
         n = o.shape[0]
-        c = min(self.ray_chunk, n)
+        c = min(self.ray_chunk, max(-(-quantum // 2), 1), n)
         npad = round_up(n, c)
         o = jnp.pad(o, ((0, npad - n), (0, 0)))
         d = jnp.pad(d, ((0, npad - n), (0, 0)))
-        col, dep = jax.lax.map(
-            lambda od: self.model.render_rays(params, od[0], od[1]),
-            (o.reshape(-1, c, 3), d.reshape(-1, c, 3)))
+        if seg is None:
+            col, dep = jax.lax.map(
+                lambda od: self.model.render_rays(params, od[0], od[1]),
+                (o.reshape(-1, c, 3), d.reshape(-1, c, 3)))
+        else:
+            seg = jnp.pad(seg, (0, npad - n), constant_values=num_seg)
+            col, dep = jax.lax.map(
+                lambda ods: self.model.render_rays(
+                    params, ods[0], ods[1], seg=ods[2], num_seg=num_seg),
+                (o.reshape(-1, c, 3), d.reshape(-1, c, 3),
+                 seg.reshape(-1, c)))
         return col.reshape(npad, 3)[:n], dep.reshape(npad)[:n]
 
-    def _render_full(self, params: dict, c2w: jnp.ndarray
-                     ) -> Tuple[jnp.ndarray, jnp.ndarray]:
-        o, d = rays.generate_rays(self.cam, c2w)
-        col, dep = self._render_rays_chunked(params, o, d)
-        h, w = self.cam.height, self.cam.width
-        return col.reshape(h, w, 3), dep.reshape(h, w)
-
-    def _compact_holes(self, hflat: jnp.ndarray
-                       ) -> Tuple[jnp.ndarray, jnp.ndarray]:
-        """[HW] bool -> ([hole_cap] pixel ids in raster order, true count).
-
-        Deterministic cumsum-scatter compaction (the in-graph replacement for
-        host ``np.nonzero``). Slots past the hole count alias pixel 0; they
-        are masked out when scattering rendered colors back.
-        """
-        cap = self.hole_cap
-        n = hflat.shape[0]
-        pos = jnp.cumsum(hflat) - 1  # rank among holes
-        slot = jnp.where(hflat & (pos < cap), pos, cap)
-        idx = jnp.zeros((cap + 1,), jnp.int32).at[slot].set(
-            jnp.arange(n, dtype=jnp.int32), mode="drop")
-        return idx[:cap], hflat.sum()
-
-    def _warp_and_compact(self, params: dict, ref_pose: jnp.ndarray,
-                          tgt_poses: jnp.ndarray):
-        """Steps ①–③ of a window + hole compaction.
-
-        Returns (warped_rgb [N,HW,3], holes [N,HW] bool, idx [N,cap],
-        counts [N]) — shared by the single-session and session-batched
-        window renderers.
-        """
+    def _dense_fill_flat(self, params: dict, tgt_poses: jnp.ndarray
+                         ) -> jnp.ndarray:
+        """Dense re-render of every target frame of every session — the
+        overflow fallback, itself one flat batch. [S, N, HW, 3]."""
+        s, n = tgt_poses.shape[0], tgt_poses.shape[1]
         hw = self.cam.height * self.cam.width
-        n = tgt_poses.shape[0]
-        # ① reference render, shared by all N targets of the window
-        rgb_ref, dep_ref = self._render_full(params, ref_pose)
-        # ②③ batched warp: all targets against the one reference
-        warped = jax.vmap(lambda tgt: sparw.warp_frame(
-            rgb_ref, dep_ref, ref_pose, tgt, self.cam, phi_deg=self.phi_deg)
-        )(tgt_poses)
-        holes = warped.holes.reshape(n, hw)
-        idx, counts = jax.vmap(self._compact_holes)(holes)
-        return warped.rgb.reshape(n, hw, 3), holes, idx, counts
-
-    def _sparse_fill(self, params: dict, tgt_poses: jnp.ndarray,
-                     idx: jnp.ndarray, counts: jnp.ndarray) -> jnp.ndarray:
-        """④ sparse NeRF of the disoccluded pixels — one batched render of
-        all N frames' compacted holes, scattered back to [N, HW, 3]."""
-        hw = self.cam.height * self.cam.width
-        cap = self.hole_cap
-        n = tgt_poses.shape[0]
-        o_all, d_all = rays.generate_rays_batch(self.cam, tgt_poses)
-        osel = jnp.take_along_axis(o_all, idx[..., None], axis=1)
-        dsel = jnp.take_along_axis(d_all, idx[..., None], axis=1)
-        col, _ = self._render_rays_chunked(
-            params, osel.reshape(-1, 3), dsel.reshape(-1, 3))
-        col = col.reshape(n, cap, 3)
-        valid = jnp.arange(cap)[None, :] < counts[:, None]
-
-        def scatter_back(idx_f, col_f, valid_f):
-            buf = jnp.zeros((hw + 1, 3), col_f.dtype).at[
-                jnp.where(valid_f, idx_f, hw)].set(col_f, mode="drop")
-            return buf[:hw]
-
-        return jax.vmap(scatter_back)(idx, col, valid)
-
-    def _dense_fill(self, params: dict, tgt_poses: jnp.ndarray) -> jnp.ndarray:
-        """Dense re-render of every target frame — the overflow fallback
-        (same output as the sparse path, more work — the RIT-overflow
-        discipline). [N, HW, 3]."""
-        col, _ = jax.lax.map(
-            lambda p: self._render_rays_chunked(
-                params, *rays.generate_rays(self.cam, p)), tgt_poses)
-        return col
-
-    def _render_window(self, params: dict, ref_pose: jnp.ndarray,
-                       tgt_poses: jnp.ndarray) -> WindowResult:
-        """The whole warp window — one traced function, no host round-trips."""
-        h, w = self.cam.height, self.cam.width
-        n = tgt_poses.shape[0]
-        warped_rgb, holes, idx, counts = self._warp_and_compact(
-            params, ref_pose, tgt_poses)
-        overflowed = jnp.max(counts) > self.hole_cap
-        fill = jax.lax.cond(
-            overflowed,
-            lambda _: self._dense_fill(params, tgt_poses),
-            lambda _: self._sparse_fill(params, tgt_poses, idx, counts),
-            None)
-        frames = jnp.where(holes[..., None], fill, warped_rgb)
-        return WindowResult(frames.reshape(n, h, w, 3),
-                            counts.astype(jnp.int32), overflowed)
+        o, d = rays.generate_rays_batch(self.cam, tgt_poses.reshape(-1, 4, 4))
+        seg = (jnp.repeat(jnp.arange(s, dtype=jnp.int32), n * hw)
+               if self._seg_aware else None)
+        col, _ = self._render_rays_flat(params, o.reshape(-1, 3),
+                                        d.reshape(-1, 3), seg, s,
+                                        quantum=n * hw)
+        return col.reshape(s, n, hw, 3)
 
     def _render_windows(self, params: dict, ref_poses: jnp.ndarray,
                         tgt_poses: jnp.ndarray, win_lens: jnp.ndarray,
                         caps: jnp.ndarray) -> BatchedWindowResult:
-        """S concurrent sessions' windows — ONE traced function.
+        """S concurrent sessions' windows — ONE traced function built from
+        flat cross-session stages (see the module docstring for the ①–④
+        walk-through).
 
-        ``ref_poses`` is [S,4,4] (one reference per session), ``tgt_poses``
-        [S,N,4,4]. Model params — including the streaming backend's MVoxel
-        table — are broadcast (``in_axes=None``): one table serves every
-        session. The overflow fallback is *per session*: a session that
-        exceeds its hole capacity takes its frames from the dense branch
-        while its neighbours keep the sparse-path output bit-for-bit (the
-        dense branch itself is guarded by a single ``lax.cond`` so the
-        no-overflow steady state compiles to the sparse path only).
+        The overflow fallback is *per session*: a session that exceeds its
+        hole capacity takes its frames from the dense branch while its
+        neighbours keep the sparse-path output bit-for-bit (the dense
+        branch is guarded by a single ``lax.cond`` so the no-overflow
+        steady state compiles to the sparse path only).
 
         ``win_lens`` [S] and ``caps`` [S] carry the per-session overrides
         that let *ragged* windows batch into this one program: a session
@@ -253,33 +238,72 @@ class DeviceSparwEngine:
         """
         s, n = tgt_poses.shape[0], tgt_poses.shape[1]
         h, w = self.cam.height, self.cam.width
-        warped_rgb, holes, idx, counts = jax.vmap(
-            self._warp_and_compact, in_axes=(None, 0, 0))(
-            params, ref_poses, tgt_poses)
+        hw = h * w
+        cap = self.hole_cap
+        # ① ONE fused reference render across all sessions' rays
+        ref = raybatch.pack_reference_rays(self.cam, ref_poses)
+        col, dep = self._render_rays_flat(
+            params, ref.origins, ref.dirs,
+            ref.seg if self._seg_aware else None, s, quantum=hw)
+        rgb_ref = col.reshape(s, h, w, 3)
+        dep_ref = dep.reshape(s, h, w)
+        # ②③ one flat warp scatter pass + flat fixed-capacity compaction
+        warped = sparw.warp_frames_flat(rgb_ref, dep_ref, ref_poses,
+                                        tgt_poses, self.cam,
+                                        phi_deg=self.phi_deg)
+        holes = warped.holes.reshape(s, n, hw)
+        idx, counts = sparw.compact_holes_flat(holes, cap)
         # per-session window-length mask: padded frames past win_lens[s]
         # must not trip that session's dense fallback
         live = jnp.arange(n)[None, :] < win_lens[:, None]  # [S, N]
         overflowed = jnp.max(jnp.where(live, counts, 0), axis=1) > caps  # [S]
-        sparse = jax.vmap(self._sparse_fill, in_axes=(None, 0, 0, 0))(
-            params, tgt_poses, idx, counts)
+        # ④ ONE fused sparse fill over the tick's flat hole batch, then
+        # segment-scatter back to frames
+        batch, addr = raybatch.pack_hole_rays(self.cam, tgt_poses, idx)
+        fill_col, _ = self._render_rays_flat(
+            params, batch.origins, batch.dirs,
+            batch.seg if self._seg_aware else None, s, quantum=n * cap)
+        valid = (jnp.arange(cap)[None, None, :] < counts[..., None])
+        sparse = raybatch.scatter_segments(
+            fill_col, addr, valid.reshape(-1), s * n * hw)
+        sparse = sparse.reshape(s, n, hw, 3)
         dense = jax.lax.cond(
             jnp.any(overflowed),
-            lambda _: jax.vmap(self._dense_fill, in_axes=(None, 0))(
-                params, tgt_poses),
+            lambda _: self._dense_fill_flat(params, tgt_poses),
             lambda _: jnp.zeros_like(sparse),
             None)
         fill = jnp.where(overflowed[:, None, None, None], dense, sparse)
-        frames = jnp.where(holes[..., None], fill, warped_rgb)
+        frames = jnp.where(holes[..., None], fill,
+                           warped.rgb.reshape(s, n, hw, 3))
         return BatchedWindowResult(frames.reshape(s, n, h, w, 3),
                                    counts.astype(jnp.int32), overflowed)
 
     # ------------------------------------------------------------------
+    def _staged_masks(self, s: int, n: int
+                      ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+        staged = self._default_masks.get((s, n))
+        if staged is None:
+            staged = (jnp.full((s,), n, jnp.int32),
+                      jnp.full((s,), self.hole_cap, jnp.int32))
+            self._default_masks[(s, n)] = staged
+        return staged
+
     def render_window(self, ref_pose: jnp.ndarray, tgt_poses: jnp.ndarray
                       ) -> WindowResult:
-        """Render one warp window (N target poses vs a shared reference) as a
-        single jitted call. ``jax.jit`` re-traces only per distinct N."""
+        """Render one warp window (N target poses vs a shared reference) as
+        a single jitted call — the flat program at S=1, so an exclusive run
+        executes exactly the batched per-session code path. ``jax.jit``
+        re-traces only per distinct N."""
+        n = tgt_poses.shape[0]
+        win_lens, caps = self._staged_masks(1, n)
         self.num_window_calls += 1
-        return self._window_jit(self.params, ref_pose, tgt_poses)
+        res = self._windows_jit(self.params, ref_pose[None], tgt_poses[None],
+                                win_lens, caps)
+        # static squeezes (not [0]-indexing, which would stage a host index
+        # constant and trip the zero-host-sync transfer guard)
+        return WindowResult(jnp.squeeze(res.frames, 0),
+                            jnp.squeeze(res.hole_counts, 0),
+                            jnp.squeeze(res.overflowed, 0))
 
     def render_windows(self, ref_poses: jnp.ndarray, tgt_poses: jnp.ndarray,
                        win_lens: Optional[jnp.ndarray] = None,
@@ -294,16 +318,24 @@ class DeviceSparwEngine:
         (S, N), so the default path stays transfer-free after warm-up).
         Re-traces only per distinct (S, N); a fixed-slot serving engine
         therefore compiles exactly one program for its whole lifetime.
+
+        With ``config.shard`` enabled the session axis is laid over the
+        device mesh (S must divide evenly; sessions are pinned whole).
         """
         s, n = tgt_poses.shape[0], tgt_poses.shape[1]
         if win_lens is None or caps is None:
-            staged = self._default_masks.get((s, n))
-            if staged is None:
-                staged = (jnp.full((s,), n, jnp.int32),
-                          jnp.full((s,), self.hole_cap, jnp.int32))
-                self._default_masks[(s, n)] = staged
+            staged = self._staged_masks(s, n)
             win_lens = staged[0] if win_lens is None else win_lens
             caps = staged[1] if caps is None else caps
+        if self.mesh is not None and s > 1:
+            ndev = self.mesh.devices.size
+            if s % ndev != 0:
+                raise ValueError(
+                    f"render_windows: {s} sessions cannot shard evenly "
+                    f"over {ndev} devices")
+            ref_poses, tgt_poses, win_lens, caps = \
+                raybatch.shard_session_inputs(
+                    self.mesh, ref_poses, tgt_poses, win_lens, caps)
         self.num_window_calls += 1
         return self._windows_jit(self.params, ref_poses, tgt_poses,
                                  win_lens, caps)

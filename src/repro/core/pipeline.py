@@ -18,6 +18,7 @@ previously *rendered* frame — serialized, error-accumulating).
 """
 from __future__ import annotations
 
+from collections import OrderedDict
 from typing import Dict, List, Optional, Sequence, Tuple, Union
 
 import jax
@@ -36,6 +37,67 @@ from repro.core.config import (  # noqa: F401 (RenderStats re-export)
 from repro.core.engine import DeviceSparwEngine  # noqa: F401 (re-export)
 from repro.nerf import models, rays
 from repro.utils import psnr
+
+
+class _ParamsToken:
+    """Identity token for a params pytree, safe against ``id()`` recycling.
+
+    The old engine caches keyed on ``id(params)`` — after the original
+    params dict was garbage-collected, CPython could hand the same id to a
+    *different* params object and the cache would silently serve an engine
+    compiled for someone else's weights. The token closes that hole by
+    *keeping the keyed object alive* for as long as the cache entry exists
+    (so its id can never be recycled out from under the key); the LRU
+    bound on the cache keeps that pinning small and finite, which is the
+    weakref-safety property the cache needs without requiring the params
+    container itself to support weak references (plain dicts do not).
+    """
+
+    __slots__ = ("obj",)
+
+    def __init__(self, obj: object):
+        self.obj = obj
+
+    def __hash__(self) -> int:
+        return id(self.obj)
+
+    def __eq__(self, other: object) -> bool:
+        return isinstance(other, _ParamsToken) and other.obj is self.obj
+
+
+class _EngineLRU:
+    """Small least-recently-used cache for compiled engines.
+
+    Long-lived servers render many distinct per-request override configs;
+    an unbounded ``dict`` leaks one compiled engine per distinct
+    ``(params, config)`` forever. This keeps the ``maxsize`` most recently
+    *used* entries (a plain bounded dict evicts by insertion order, which
+    throws away the hottest engine under a cyclic access pattern). An
+    evicted engine keeps working for anyone holding it — only the cache
+    forgets it.
+    """
+
+    def __init__(self, maxsize: int = 16):
+        self.maxsize = maxsize
+        self._entries: "OrderedDict[tuple, object]" = OrderedDict()
+
+    def get(self, key: tuple) -> Optional[object]:
+        value = self._entries.get(key)
+        if value is not None:
+            self._entries.move_to_end(key)
+        return value
+
+    def put(self, key: tuple, value: object) -> None:
+        self._entries[key] = value
+        self._entries.move_to_end(key)
+        while len(self._entries) > self.maxsize:
+            self._entries.popitem(last=False)
+
+    def __len__(self) -> int:
+        return len(self._entries)
+
+    def __contains__(self, key: tuple) -> bool:
+        return key in self._entries
 
 
 class CiceroRenderer:
@@ -70,25 +132,13 @@ class CiceroRenderer:
             lambda rgb, dep, p_ref, p_tgt: sparw.warp_frame(
                 rgb, dep, p_ref, p_tgt, self.cam, phi_deg=config.phi_deg))
         # engine caches keyed on the FULL config (hash == compile surface)
-        # plus the params identity — never on a lone knob like num_slots,
-        # which could silently hand back a stale compiled program. The
-        # params id only varies if a caller reassigns ``renderer.params``
-        # (engines capture params at construction, so a swap must miss).
-        # Bounded: per-request overrides would otherwise grow one compiled
-        # engine per distinct (window, hole_cap) pair forever.
-        self._device_engines: Dict[tuple, DeviceSparwEngine] = {}
-        self._serve_engines: Dict[tuple, object] = {}
-        self._max_cached_engines = 16
-
-    @staticmethod
-    def _cache_put(cache: Dict[tuple, object], key: tuple, value: object,
-                   limit: int) -> None:
-        """Insert with oldest-first eviction (dicts preserve insertion
-        order); an evicted engine keeps working for anyone holding it —
-        only the cache forgets it."""
-        while len(cache) >= limit:
-            cache.pop(next(iter(cache)))
-        cache[key] = value
+        # plus a weakref-safe params identity token — never on a lone knob
+        # like num_slots (stale-program hazard) nor on a raw id() (recycled
+        # after GC, so two distinct params could alias one engine). LRU:
+        # per-request overrides would otherwise grow one compiled engine
+        # per distinct (window, hole_cap) pair forever.
+        self._device_engines = _EngineLRU()
+        self._serve_engines = _EngineLRU()
 
     # read-only views of the compile-relevant knobs (kwarg-era attributes)
     @property
@@ -112,17 +162,16 @@ class CiceroRenderer:
         return self.config.hole_cap
 
     def _engine_key(self, config: RenderConfig) -> tuple:
-        return (id(self.params), config)
+        return (_ParamsToken(self.params), config)
 
     def device_engine_for(self, config: RenderConfig) -> DeviceSparwEngine:
         """The cached device engine compiled for ``config`` (built on first
-        use; one engine per distinct compile surface)."""
+        use; one engine per distinct compile surface, LRU-bounded)."""
         key = self._engine_key(config)
         eng = self._device_engines.get(key)
         if eng is None:
             eng = DeviceSparwEngine(self.model, self.params, config=config)
-            self._cache_put(self._device_engines, key, eng,
-                            self._max_cached_engines)
+            self._device_engines.put(key, eng)
         return eng
 
     @property
@@ -182,16 +231,17 @@ class CiceroRenderer:
     def serve_engine_for(self, config: RenderConfig):
         """The cached serving engine for ``config`` — keyed on the FULL
         config (slots + window + hole_cap + every other compile knob, plus
-        the params identity at lookup time), closing the stale-cache hazard
-        of the old per-``num_slots`` keying."""
+        the weakref-safe params token at lookup time), closing both the
+        stale-cache hazard of the old per-``num_slots`` keying and the
+        recycled-``id()`` aliasing of the old ``(id(params), config)``
+        key. LRU-bounded for long-lived servers."""
         from repro.serve.render_engine import RenderServeEngine
 
         key = self._engine_key(config)
         serve = self._serve_engines.get(key)
         if serve is None:
             serve = RenderServeEngine(self.model, self.params, config=config)
-            self._cache_put(self._serve_engines, key, serve,
-                            self._max_cached_engines)
+            self._serve_engines.put(key, serve)
         return serve
 
     def serve(self, requests: Sequence[Union[RenderRequest, Sequence[jnp.ndarray]]],

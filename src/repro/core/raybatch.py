@@ -1,0 +1,146 @@
+"""Flat ray-batch execution core (cross-session fusion + session sharding).
+
+PR 3's multi-session engine batched S sessions by ``vmap``-ing the whole
+per-session pipeline over a leading session axis. That regularizes
+*dispatch* (one device call per tick) but not *dataflow*: the NeRF
+evaluation still runs as S small per-session programs whose vmapped
+scatter/gather order costs more than the dispatch it saves (the measured
+warm batched-vs-sequential ratio was ~0.5× on CPU). Potamoi's unified
+streaming pipeline and RT-NeRF's dense-batch regularization both make the
+same point at the architecture level: pack the sparse, per-client work
+into ONE flat, contiguous stream *before* the expensive stages.
+
+This module is that packing layer. A tick's work becomes one **flat ray
+batch**:
+
+* every session's reference rays pack to ``[S * HW, 3]`` (session-major),
+* every (session, frame)'s compacted hole samples pack to
+  ``[S * N * cap, 3]`` — the fixed-capacity flat batch, with segment ids
+  mapping each row back to its ``(session, frame)``,
+* ONE fused reference render + ONE sparse-fill NeRF call run over these
+  flat batches (the Pallas kernels finally see large contiguous inputs),
+* results **segment-scatter** back to ``[S, N, H, W, 3]`` frames.
+
+Because the flat layout is session-major, laying a
+``jax.sharding.NamedSharding`` over the leading session axis
+(:class:`~repro.core.config.ShardConfig`) pins each session's rays,
+samples and frames to one device — the segment scatters never cross a
+device boundary. Single-device execution is bit-identical to the
+unsharded engine.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.config import ShardConfig
+from repro.nerf import rays
+
+
+class FlatRays(NamedTuple):
+    """A flat, session-major ray batch: the unit of fused NeRF work.
+
+    ``seg`` maps every ray to its owning *session* (``[0, num_seg)``) —
+    the streaming backend buckets its Ray Index Table per (segment,
+    MVoxel) so each session keeps exclusive-run capacity semantics inside
+    the one fused gather. Rays appended as chunk padding use segment id
+    ``num_seg`` (the dump segment: no capacity consumed, output ignored).
+    """
+
+    origins: jnp.ndarray  # [F, 3]
+    dirs: jnp.ndarray     # [F, 3]
+    seg: jnp.ndarray      # [F] int32 — owning session per ray
+
+
+def pack_reference_rays(cam: rays.Camera, ref_poses: jnp.ndarray) -> FlatRays:
+    """All S sessions' reference-frame rays as ONE flat batch [S*HW, 3]."""
+    s = ref_poses.shape[0]
+    hw = cam.height * cam.width
+    o, d = rays.generate_rays_batch(cam, ref_poses)  # [S, HW, 3]
+    seg = jnp.repeat(jnp.arange(s, dtype=jnp.int32), hw)
+    return FlatRays(o.reshape(-1, 3), d.reshape(-1, 3), seg)
+
+
+def pack_hole_rays(cam: rays.Camera, tgt_poses: jnp.ndarray,
+                   idx: jnp.ndarray) -> Tuple[FlatRays, jnp.ndarray]:
+    """The tick's compacted hole samples as ONE fixed-capacity flat batch.
+
+    ``tgt_poses`` is ``[S, N, 4, 4]``, ``idx`` the ``[S, N, cap]`` compacted
+    hole pixel ids (:func:`repro.core.sparw.compact_holes_flat`). Returns
+    (flat rays ``[S*N*cap]``, and the flat *pixel addresses*
+    ``[S*N*cap]`` — ``(s*N + n) * HW + pixel`` — used to segment-scatter
+    rendered colors back into frames). Rows past a frame's true hole count
+    alias its pixel 0 (exactly like the per-frame compaction) and are
+    masked at scatter time.
+    """
+    s, n, cap = idx.shape
+    hw = cam.height * cam.width
+    b = s * n
+    o_all, d_all = rays.generate_rays_batch(
+        cam, tgt_poses.reshape(b, 4, 4))  # [B, HW, 3]
+    # flat gather of the compacted rays: one address space over the tick
+    seg_off = (jnp.arange(b, dtype=jnp.int32) * hw).reshape(s, n, 1)
+    addr = (seg_off + idx).reshape(-1)  # [S*N*cap] flat ray/pixel address
+    osel = o_all.reshape(-1, 3)[addr]
+    dsel = d_all.reshape(-1, 3)[addr]
+    seg = jnp.repeat(jnp.arange(s, dtype=jnp.int32), n * cap)
+    return FlatRays(osel, dsel, seg), addr
+
+
+def scatter_segments(values: jnp.ndarray, addr: jnp.ndarray,
+                     valid: jnp.ndarray, size: int) -> jnp.ndarray:
+    """Segment-scatter flat results back to frame pixels: ONE scatter.
+
+    ``values`` ``[F, C]`` land at flat pixel ``addr`` ``[F]`` of a
+    ``[size, C]`` zero buffer; rows with ``valid`` False are dropped
+    (their address is pushed out of range — ``mode="drop"`` keeps the
+    scatter in-graph with a static shape, no host ``nonzero``).
+    """
+    tgt = jnp.where(valid, addr, size)
+    return jnp.zeros((size, values.shape[-1]), values.dtype).at[tgt].set(
+        values, mode="drop")
+
+
+# ---------------------------------------------------------------------------
+# session sharding (ShardConfig -> jax.sharding)
+# ---------------------------------------------------------------------------
+
+
+def make_mesh(shard: Optional[ShardConfig]):
+    """Build the 1-D session mesh for ``shard``, or None when disabled.
+
+    Raises if the host exposes fewer devices than ``shard.num_devices`` —
+    silently falling back would hide a misconfigured fleet.
+    """
+    if shard is None or not shard.enabled:
+        return None
+    devices = jax.devices()
+    if len(devices) < shard.num_devices:
+        raise ValueError(
+            f"ShardConfig requests {shard.num_devices} devices but only "
+            f"{len(devices)} are visible (JAX_PLATFORMS/XLA_FLAGS)")
+    return jax.sharding.Mesh(np.asarray(devices[:shard.num_devices]),
+                             (shard.axis_name,))
+
+
+def session_sharding(mesh) -> jax.sharding.NamedSharding:
+    """Sharding that splits the *leading* (session) axis across the mesh;
+    trailing axes are replicated/unsplit."""
+    return jax.sharding.NamedSharding(
+        mesh, jax.sharding.PartitionSpec(mesh.axis_names[0]))
+
+
+def replicated_sharding(mesh) -> jax.sharding.NamedSharding:
+    """Fully-replicated layout (model params, MVoxel table: one logical
+    copy serves every session on every device)."""
+    return jax.sharding.NamedSharding(mesh, jax.sharding.PartitionSpec())
+
+
+def shard_session_inputs(mesh, *arrays):
+    """Lay the session sharding over each array's leading axis (device_put
+    is device-to-device after the first tick — no host round-trip)."""
+    sh = session_sharding(mesh)
+    return tuple(jax.device_put(a, sh) for a in arrays)

@@ -57,18 +57,22 @@ def project(points_tgt: jnp.ndarray, cam: Camera
     return u, v, z
 
 
-def warp_frame(
-    rgb_ref: jnp.ndarray,  # [H, W, 3]
+def _project_to_target(
     depth_ref: jnp.ndarray,  # [H, W]
     c2w_ref: jnp.ndarray,
     c2w_tgt: jnp.ndarray,
     cam: Camera,
-    phi_deg: Optional[float] = None,
-    depth_eps: float = 1e-3,
-) -> WarpResult:
-    """Warp a reference frame into the target camera (steps ①–③)."""
+    phi_deg: Optional[float],
+) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """Steps ①–③ up to (but excluding) the z-buffer scatter.
+
+    Returns per reference pixel: (target raster address [HW] int32,
+    depth-in-target z [HW], valid [HW] bool, warp angle [HW]). Shared by
+    the per-frame :func:`warp_frame` and the flat-batch
+    :func:`warp_frames_flat` so both paths compute bit-identical geometry —
+    only the scatter address space differs.
+    """
     h, w = depth_ref.shape
-    n = h * w
     pts_ref = frame_to_pointcloud(depth_ref, cam)
     # world-space points computed once: reused for the Eq. 2 transform below
     # and for the warp-angle heuristic (transform_points would recompute it)
@@ -89,8 +93,24 @@ def warp_frame(
     angle = jnp.arccos(jnp.clip(cos, -1.0, 1.0))
     if phi_deg is not None:
         valid = valid & (angle <= jnp.deg2rad(phi_deg))
+    return vi * w + ui, z, valid, angle
 
-    flat = jnp.where(valid, vi * w + ui, n)  # invalid -> dump slot n
+
+def warp_frame(
+    rgb_ref: jnp.ndarray,  # [H, W, 3]
+    depth_ref: jnp.ndarray,  # [H, W]
+    c2w_ref: jnp.ndarray,
+    c2w_tgt: jnp.ndarray,
+    cam: Camera,
+    phi_deg: Optional[float] = None,
+    depth_eps: float = 1e-3,
+) -> WarpResult:
+    """Warp a reference frame into the target camera (steps ①–③)."""
+    h, w = depth_ref.shape
+    n = h * w
+    raster, z, valid, angle = _project_to_target(depth_ref, c2w_ref, c2w_tgt,
+                                                 cam, phi_deg)
+    flat = jnp.where(valid, raster, n)  # invalid -> dump slot n
 
     # pass 1: scatter-min depth
     zbuf = jnp.full((n + 1,), jnp.inf).at[flat].min(z)
@@ -114,10 +134,126 @@ def warp_frame(
     )
 
 
+def warp_frames_flat(
+    rgb_ref: jnp.ndarray,  # [S, H, W, 3] per-session reference frames
+    depth_ref: jnp.ndarray,  # [S, H, W]
+    c2w_ref: jnp.ndarray,  # [S, 4, 4]
+    c2w_tgt: jnp.ndarray,  # [S, N, 4, 4]
+    cam: Camera,
+    phi_deg: Optional[float] = None,
+    depth_eps: float = 1e-3,
+) -> WarpResult:
+    """Warp every session's window in ONE flat scatter pass.
+
+    The projection geometry is the vmapped :func:`_project_to_target`
+    (bit-identical per element to the per-frame path); the z-buffer and
+    winner resolution then run as single scatters over a flat
+    ``[S * N * H * W]`` address space instead of ``S × N`` small vmapped
+    scatters — the irregular-work regularization the flat ray-batch core
+    exists for. Segment addresses are ``(session, frame)``-major, so no
+    two frames' candidates ever collide and (under session sharding) a
+    scatter never crosses a device boundary.
+
+    Returns a :class:`WarpResult` whose fields carry leading ``[S, N]``
+    axes. Each ``[s, n]`` slice is bit-identical to
+    ``warp_frame(rgb_ref[s], depth_ref[s], c2w_ref[s], c2w_tgt[s, n])``.
+    """
+    s, n = c2w_tgt.shape[0], c2w_tgt.shape[1]
+    h, w = depth_ref.shape[-2:]
+    hw = h * w
+    b = s * n  # total frames in the tick
+    proj = jax.vmap(  # over sessions ...
+        jax.vmap(_project_to_target, in_axes=(None, None, 0, None, None)),
+        in_axes=(0, 0, 0, None, None),
+    )  # ... and over each session's window
+    raster, z, valid, angle = proj(depth_ref, c2w_ref, c2w_tgt, cam, phi_deg)
+    # [S, N, HW] -> flat [B * HW] with (session, frame)-major addresses;
+    # invalid candidates go out of range and are dropped by mode="drop"
+    seg_off = (jnp.arange(b, dtype=jnp.int32) * hw).reshape(s, n, 1)
+    flat = jnp.where(valid, seg_off + raster, b * hw).reshape(-1)
+    z_flat = z.reshape(-1)
+
+    # pass 1: ONE scatter-min depth over every frame of every session
+    zbuf = jnp.full((b * hw,), jnp.inf).at[flat].min(z_flat, mode="drop")
+    # pass 2: deterministic winner = max source-point index among ties.
+    # The point index is globally offset per session (i + s*HW) so one flat
+    # gather pulls the winning color from the packed reference frames; the
+    # per-pixel winner is unchanged (all of a pixel's candidates share s).
+    zb_at = zbuf[jnp.minimum(flat, b * hw - 1)]
+    is_front = valid.reshape(-1) & (z_flat <= zb_at + depth_eps)
+    pid = (jnp.arange(hw, dtype=jnp.int32)[None, :]
+           + (jnp.arange(s, dtype=jnp.int32) * hw)[:, None])  # [S, HW]
+    pid = jnp.broadcast_to(pid[:, None, :], (s, n, hw)).reshape(-1)
+    winner = jnp.full((b * hw,), -1, jnp.int32).at[
+        jnp.where(is_front, flat, b * hw)].max(pid, mode="drop")
+
+    has = winner >= 0
+    src_global = jnp.maximum(winner, 0)  # index into [S*HW] packed refs
+    rgb = jnp.where(has[:, None], rgb_ref.reshape(-1, 3)[src_global], 0.0)
+    depth = jnp.where(has, zbuf, jnp.inf)
+    # the warp angle lives on the (source point, target frame) pair: gather
+    # it per output frame from that frame's own angle row
+    ang_rows = jnp.take_along_axis(angle.reshape(b, hw),
+                                   src_global.reshape(b, hw) % hw, axis=1)
+    ang = jnp.where(has, ang_rows.reshape(-1), 0.0)
+    return WarpResult(
+        rgb=rgb.reshape(s, n, h, w, 3),
+        depth=depth.reshape(s, n, h, w),
+        holes=~has.reshape(s, n, h, w),
+        warp_angle=ang.reshape(s, n, h, w),
+    )
+
+
 def combine(warped: WarpResult, sparse_rgb: jnp.ndarray, holes: jnp.ndarray
             ) -> jnp.ndarray:
     """Eq. 4: F_tgt = F'_tgt ⊛ Γ_sp — fill holes with sparse NeRF output."""
     return jnp.where(holes[..., None], sparse_rgb, warped.rgb)
+
+
+# ---------------------------------------------------------------------------
+# fixed-capacity hole compaction (step ④ staging)
+# ---------------------------------------------------------------------------
+
+
+def compact_holes(hflat: jnp.ndarray, cap: int
+                  ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """[HW] bool -> ([cap] hole pixel ids in raster order, true count).
+
+    Deterministic cumsum-scatter compaction (the in-graph replacement for
+    host ``np.nonzero``). Slots past the hole count alias pixel 0; they
+    are masked out when scattering rendered colors back.
+    """
+    n = hflat.shape[0]
+    pos = jnp.cumsum(hflat) - 1  # rank among holes
+    slot = jnp.where(hflat & (pos < cap), pos, cap)
+    idx = jnp.zeros((cap + 1,), jnp.int32).at[slot].set(
+        jnp.arange(n, dtype=jnp.int32), mode="drop")
+    return idx[:cap], hflat.sum()
+
+
+def compact_holes_flat(holes: jnp.ndarray, cap: int
+                       ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Compact every (session, frame)'s holes in ONE flat scatter.
+
+    ``holes`` is ``[S, N, HW]`` bool; returns (``idx [S, N, cap]`` hole
+    pixel ids in raster order, ``counts [S, N]`` true hole counts). The
+    compaction slots are emitted as *flat segment offsets* — segment
+    ``(s, n)`` owns rows ``[(s*N + n) * (cap+1), ...)`` of one scatter
+    address space — so the whole tick compacts with a single scatter
+    instead of S×N vmapped ones. Each ``[s, n]`` slice is bit-identical
+    to :func:`compact_holes` on that frame.
+    """
+    s, n, hw = holes.shape
+    b = s * n
+    hf = holes.reshape(b, hw)
+    pos = jnp.cumsum(hf, axis=1) - 1  # rank among the frame's holes
+    slot = jnp.where(hf & (pos < cap), pos, cap)  # [B, HW] in [0, cap]
+    seg_off = jnp.arange(b, dtype=jnp.int32)[:, None] * (cap + 1)
+    pix = jnp.broadcast_to(jnp.arange(hw, dtype=jnp.int32), (b, hw))
+    idx = jnp.zeros((b * (cap + 1),), jnp.int32).at[
+        (seg_off + slot).reshape(-1)].set(pix.reshape(-1), mode="drop")
+    idx = idx.reshape(b, cap + 1)[:, :cap]  # drop each segment's dump slot
+    return idx.reshape(s, n, cap), hf.sum(axis=1).reshape(s, n)
 
 
 def hole_fraction(holes: jnp.ndarray) -> jnp.ndarray:

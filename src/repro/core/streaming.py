@@ -33,7 +33,7 @@ from __future__ import annotations
 
 from collections import OrderedDict
 from dataclasses import dataclass
-from typing import Dict, NamedTuple, Tuple
+from typing import Dict, NamedTuple, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -122,24 +122,35 @@ class RIT(NamedTuple):
     overflow: jnp.ndarray  # [S] bool — not covered (fallback path)
 
 
-def build_rit(mv: jnp.ndarray, cfg: StreamingCfg) -> RIT:
+def build_rit(mv: jnp.ndarray, cfg: StreamingCfg,
+              num_slots: Optional[int] = None) -> RIT:
+    """RIT over ``num_slots`` buckets (default: one per MVoxel).
+
+    The flat ray-batch core passes ``num_slots = num_seg * num_mvoxels``
+    with combined ``(segment, mvoxel)`` ids so every serving session keeps
+    its own per-MVoxel capacity inside ONE table build. Samples whose id is
+    ``>= num_slots`` (e.g. chunk-padding rays routed to the dump segment)
+    are dropped from the table entirely — they consume no capacity.
+    """
+    n_slots = cfg.num_mvoxels if num_slots is None else num_slots
     s = mv.shape[0]
     order = jnp.argsort(mv)  # the single global reorder
     mv_sorted = jnp.sort(mv)
-    # first occurrence of each mvoxel id in the sorted sequence
-    starts = jnp.searchsorted(mv_sorted, jnp.arange(cfg.num_mvoxels))
-    rank = jnp.arange(s) - starts[mv_sorted]
-    keep = rank < cfg.capacity
+    # first occurrence of each bucket id in the sorted sequence
+    starts = jnp.searchsorted(mv_sorted, jnp.arange(n_slots))
+    rank = jnp.arange(s) - starts[jnp.minimum(mv_sorted, n_slots - 1)]
+    in_range = mv_sorted < n_slots
+    keep = (rank < cfg.capacity) & in_range
     slot = mv_sorted * cfg.capacity + jnp.minimum(rank, cfg.capacity - 1)
-    flat = jnp.full((cfg.num_mvoxels * cfg.capacity,), -1, jnp.int32)
-    oob = cfg.num_mvoxels * cfg.capacity  # dropped by mode="drop"
+    flat = jnp.full((n_slots * cfg.capacity,), -1, jnp.int32)
+    oob = n_slots * cfg.capacity  # dropped by mode="drop"
     flat = flat.at[jnp.where(keep, slot, oob)].set(order.astype(jnp.int32),
                                                    mode="drop")
-    # counts per mvoxel (clipped at capacity)
-    counts_full = jnp.zeros((cfg.num_mvoxels,), jnp.int32).at[mv].add(1)
+    # counts per bucket (clipped at capacity); out-of-range ids drop
+    counts_full = jnp.zeros((n_slots,), jnp.int32).at[mv].add(1, mode="drop")
     counts = jnp.minimum(counts_full, cfg.capacity)
-    overflow = jnp.zeros((s,), bool).at[order].set(~keep)
-    return RIT(flat.reshape(cfg.num_mvoxels, cfg.capacity), counts, overflow)
+    overflow = jnp.zeros((s,), bool).at[order].set(~keep & in_range)
+    return RIT(flat.reshape(n_slots, cfg.capacity), counts, overflow)
 
 
 def streaming_gather(table: jnp.ndarray, points: jnp.ndarray,

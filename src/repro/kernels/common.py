@@ -1,0 +1,23 @@
+"""Shared kernel-entry plumbing.
+
+``resolve_interpret`` is the single decision point for Pallas execution
+mode: historically every kernel wrapper hardcoded ``interpret: bool =
+True`` (safe on the CPU dev box, but silently interpreting on real
+accelerators too). Callers now pass ``interpret=None`` ("auto") by
+default and the resolution happens once, here: interpret only where no
+accelerator backend exists. The resolved value is recorded in the
+benchmark config fingerprint (``RenderConfig.resolved_pallas_interpret``).
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+
+
+def resolve_interpret(flag: Optional[bool]) -> bool:
+    """None → auto: Pallas interpret mode iff the default backend is CPU
+    (no Mosaic/Triton lowering available); True/False force the mode."""
+    if flag is not None:
+        return bool(flag)
+    return jax.default_backend() == "cpu"

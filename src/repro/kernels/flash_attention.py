@@ -15,6 +15,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.kernels.common import resolve_interpret
+
 NEG_INF = -1e30
 
 
@@ -71,13 +73,14 @@ def flash_attention(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray, *,
                     causal: bool = True, sm_scale: float | None = None,
                     block_q: int = 128, block_k: int = 128,
                     kv_len: int | None = None,
-                    interpret: bool = True) -> jnp.ndarray:
+                    interpret: bool | None = None) -> jnp.ndarray:
     """q [B, H, Sq, D]; k/v [B, KVH, Sk, D] with H % KVH == 0 (GQA).
 
     Sq/Sk must be multiples of the block sizes (ops.py pads). When the KV
     sequence was padded, ``kv_len`` is the true (pre-padding) length: rows at
     or beyond it are masked to -inf inside the kernel.
     """
+    interpret = resolve_interpret(interpret)
     b, h, sq, d = q.shape
     _, kvh, sk, _ = k.shape
     assert h % kvh == 0

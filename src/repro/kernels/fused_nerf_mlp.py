@@ -17,6 +17,8 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
+from repro.kernels.common import resolve_interpret
+
 
 def _kernel(x_ref, d_ref, w1_ref, b1_ref, w2_ref, b2_ref, ws_ref, wr_ref,
             br_ref, out_ref):
@@ -39,9 +41,10 @@ def _kernel(x_ref, d_ref, w1_ref, b1_ref, w2_ref, b2_ref, ws_ref, wr_ref,
 @functools.partial(jax.jit, static_argnames=("block", "interpret"))
 def fused_nerf_mlp(feats: jnp.ndarray, direnc: jnp.ndarray, w1, b1, w2, b2,
                    w_sigma, w_rgb, b_rgb, *, block: int = 512,
-                   interpret: bool = True) -> jnp.ndarray:
+                   interpret: bool | None = None) -> jnp.ndarray:
     """Returns [S, 4] = (sigma_raw_softplus, rgb_sigmoid). S must be a
     multiple of ``block`` (ops.py pads)."""
+    interpret = resolve_interpret(interpret)
     s, c = feats.shape
     dd = direnc.shape[1]
     h = w1.shape[1]

@@ -27,6 +27,8 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
+from repro.kernels.common import resolve_interpret
+
 
 def _kernel(tbl_ref, ids_ref, w_ref, out_ref):
     tbl = tbl_ref[0]  # [P, C] — resident MVoxel (channel-major: C on lanes)
@@ -46,9 +48,10 @@ def _kernel(tbl_ref, ids_ref, w_ref, out_ref):
 
 @functools.partial(jax.jit, static_argnames=("interpret",))
 def gather_trilerp_mvoxels(mv_table: jnp.ndarray, ids: jnp.ndarray,
-                           weights: jnp.ndarray, *, interpret: bool = True
-                           ) -> jnp.ndarray:
+                           weights: jnp.ndarray, *,
+                           interpret: bool | None = None) -> jnp.ndarray:
     """Run the GU kernel over all MVoxels. Returns [num_mv, cap, C]."""
+    interpret = resolve_interpret(interpret)
     num_mv, p, c = mv_table.shape
     cap = ids.shape[1]
     return pl.pallas_call(
@@ -64,3 +67,58 @@ def gather_trilerp_mvoxels(mv_table: jnp.ndarray, ids: jnp.ndarray,
         out_shape=jax.ShapeDtypeStruct((num_mv, cap, c), mv_table.dtype),
         interpret=interpret,
     )(mv_table, ids, weights)
+
+
+def _kernel_seg(tbl_ref, ids_ref, w_ref, out_ref):
+    """Segmented variant: identical math, 4-D block geometry."""
+    tbl = tbl_ref[0]  # [P, C] — the resident MVoxel halo block
+    ids = ids_ref[0, 0]  # [cap, 8]
+    w = w_ref[0, 0]  # [cap, 8]
+    p = tbl.shape[0]
+    iota_p = jax.lax.broadcasted_iota(jnp.int32, (1, p), 1)
+    acc = jnp.zeros((ids.shape[0], tbl.shape[1]), jnp.float32)
+    for v in range(8):  # 8 voxel corners — static unroll (the GU's 8 cycles)
+        onehot = (ids[:, v: v + 1] == iota_p).astype(jnp.float32)
+        sel = onehot * w[:, v: v + 1]
+        acc = acc + jax.lax.dot(sel, tbl,
+                                preferred_element_type=jnp.float32)
+    out_ref[0, 0] = acc.astype(out_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("num_seg", "interpret"))
+def gather_trilerp_mvoxels_segmented(mv_table: jnp.ndarray, ids: jnp.ndarray,
+                                     weights: jnp.ndarray, *, num_seg: int,
+                                     interpret: bool | None = None
+                                     ) -> jnp.ndarray:
+    """Segment-aware GU entry point for the flat ray-batch core.
+
+    ``ids``/``weights`` are ``[num_seg * num_mv, cap, 8]`` — one RIT block
+    per (segment, MVoxel) pair, segment-major, so every segment (= serving
+    session) keeps its own per-MVoxel sample capacity exactly as an
+    exclusive single-session run would. The grid iterates segments on the
+    *inner* dimension: one MVoxel halo block stays resident in VMEM while
+    every segment's samples for it are processed (num_seg reuses per
+    HBM→VMEM stage instead of re-fetching the block per session — the
+    cross-session fusion the flat core exists for).
+
+    Returns ``[num_seg * num_mv, cap, C]`` in the same segment-major order.
+    """
+    interpret = resolve_interpret(interpret)
+    num_mv, p, c = mv_table.shape
+    cap = ids.shape[1]
+    ids4 = ids.reshape(num_seg, num_mv, cap, 8)
+    w4 = weights.reshape(num_seg, num_mv, cap, 8)
+    out = pl.pallas_call(
+        _kernel_seg,
+        grid=(num_mv, num_seg),  # seg innermost: halo block stays resident
+        in_specs=[
+            pl.BlockSpec((1, p, c), lambda m, s: (m, 0, 0)),
+            pl.BlockSpec((1, 1, cap, 8), lambda m, s: (s, m, 0, 0)),
+            pl.BlockSpec((1, 1, cap, 8), lambda m, s: (s, m, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, cap, c), lambda m, s: (s, m, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((num_seg, num_mv, cap, c),
+                                       mv_table.dtype),
+        interpret=interpret,
+    )(mv_table, ids4, w4)
+    return out.reshape(num_seg * num_mv, cap, c)

@@ -27,7 +27,9 @@ from repro.utils import round_up
 def gather_features_streaming(table: jnp.ndarray, points: jnp.ndarray,
                               cfg: streaming.StreamingCfg, *,
                               mv_table: jnp.ndarray | None = None,
-                              interpret: bool = True) -> jnp.ndarray:
+                              seg: jnp.ndarray | None = None,
+                              num_seg: int = 1,
+                              interpret: bool | None = None) -> jnp.ndarray:
     """Memory-centric feature gather of ``points`` from a dense vertex table.
 
     Builds the RIT, runs the Pallas GU kernel per MVoxel, scatters results
@@ -39,23 +41,44 @@ def gather_features_streaming(table: jnp.ndarray, points: jnp.ndarray,
     prebuilt one (``NerfModel.prepare_streaming`` caches it per params) so the
     table build is hoisted out of the per-frame hot path. When omitted it is
     built here (correct, but re-laid-out on every call).
+
+    ``seg`` ([S] int32, with static ``num_seg``) is the flat ray-batch
+    core's segment axis: samples from ``num_seg`` serving sessions share
+    this ONE gather call, but the RIT is bucketed per ``(segment, MVoxel)``
+    pair, so each session keeps exactly the per-MVoxel capacity (and
+    overflow-fallback set) its exclusive single-session run would have.
+    Samples with ``seg >= num_seg`` (chunk padding) are dropped from the
+    table — they consume no capacity and their output is unspecified.
     """
     s = points.shape[0]
     c = table.shape[-1]
     if mv_table is None:
         mv_table = streaming.build_mvoxel_table(table, cfg)  # [M, P, C]
     mv = streaming.mvoxel_ids(points, cfg)
-    rit = streaming.build_rit(mv, cfg)
+    num_mv = cfg.num_mvoxels
+    if seg is not None and num_seg > 1:
+        # combined (segment, mvoxel) bucket id, segment-major; padding
+        # segments land out of range and drop out of the table build
+        bucket = jnp.where(seg < num_seg, seg * num_mv + mv,
+                           num_seg * num_mv)
+        num_slots = num_seg * num_mv
+    else:
+        bucket, num_slots = mv, num_mv
+    rit = streaming.build_rit(bucket, cfg, num_slots=num_slots)
     local_ids, w = streaming.local_corner_ids(points, cfg)
 
-    # per-MVoxel sample blocks (RIT layout); padded rows use id 0 / weight 0
-    sample_slot = jnp.maximum(rit.samples, 0)  # [M, cap]
+    # per-bucket sample blocks (RIT layout); padded rows use id 0 / weight 0
+    sample_slot = jnp.maximum(rit.samples, 0)  # [num_slots, cap]
     valid = rit.samples >= 0
     ids_mv = jnp.where(valid[..., None], local_ids[sample_slot], 0)
     w_mv = jnp.where(valid[..., None], w[sample_slot], 0.0)
 
-    out_mv = _gt.gather_trilerp_mvoxels(mv_table, ids_mv, w_mv,
-                                        interpret=interpret)  # [M, cap, C]
+    if seg is not None and num_seg > 1:
+        out_mv = _gt.gather_trilerp_mvoxels_segmented(
+            mv_table, ids_mv, w_mv, num_seg=num_seg, interpret=interpret)
+    else:
+        out_mv = _gt.gather_trilerp_mvoxels(mv_table, ids_mv, w_mv,
+                                            interpret=interpret)
 
     # scatter back to sample order
     flat_out = out_mv.reshape(-1, c)
@@ -75,7 +98,7 @@ def gather_features_streaming(table: jnp.ndarray, points: jnp.ndarray,
 
 
 def nerf_mlp(feats: jnp.ndarray, direnc: jnp.ndarray, params: dict, *,
-             block: int = 256, interpret: bool = True
+             block: int = 256, interpret: bool | None = None
              ) -> Tuple[jnp.ndarray, jnp.ndarray]:
     """Fused decoder. params = repro.nerf.mlp decoder params (mode='mlp').
     Returns (sigma [S], rgb [S,3])."""
@@ -97,7 +120,7 @@ def nerf_mlp(feats: jnp.ndarray, direnc: jnp.ndarray, params: dict, *,
 
 
 def mha(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray, *, causal: bool = True,
-        block_q: int = 128, block_k: int = 128, interpret: bool = True
+        block_q: int = 128, block_k: int = 128, interpret: bool | None = None
         ) -> jnp.ndarray:
     """Flash attention with seq padding. q [B,H,Sq,D], k/v [B,KVH,Sk,D]."""
     b, h, sq, d = q.shape

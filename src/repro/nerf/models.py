@@ -19,6 +19,7 @@ view-dependent radiance) and is used for warp-threshold experiments.
 """
 from __future__ import annotations
 
+import warnings
 from dataclasses import dataclass, field
 from typing import Optional, Tuple
 
@@ -47,6 +48,7 @@ class NerfConfig:
     backend: str = "reference"  # reference | streaming (Pallas hot path)
     stream_mvoxel_edge: int = 8  # paper: 8^3-point MVoxels
     stream_capacity: int = 512  # RIT entry capacity (overflow -> fallback)
+    pallas_interpret: Optional[bool] = None  # None = auto (interpret on CPU)
 
     @property
     def dense_cfg(self) -> grids.DenseGridCfg:
@@ -153,7 +155,14 @@ class NerfModel:
         return {**params, "mv_table": self._mv_table_cache[1]}
 
     def query_features(self, params: dict, points: jnp.ndarray,
-                       backend: Optional[str] = None) -> jnp.ndarray:
+                       backend: Optional[str] = None,
+                       seg: Optional[jnp.ndarray] = None,
+                       num_seg: int = 1) -> jnp.ndarray:
+        """``seg``/``num_seg`` carry the flat ray-batch core's segment axis
+        (one segment per serving session): the streaming gather buckets its
+        RIT per (segment, MVoxel), so a fused cross-session batch keeps
+        exclusive-run capacity semantics. Ignored by reference paths (their
+        gathers are per-sample — segment-oblivious by construction)."""
         c = self.cfg
         backend = backend or c.backend
         if backend == "streaming" and c.kind == "dvgo":
@@ -161,7 +170,8 @@ class NerfModel:
 
             return ops.gather_features_streaming(
                 params["table"], points, self.streaming_cfg,
-                mv_table=params.get("mv_table"))
+                mv_table=params.get("mv_table"), seg=seg, num_seg=num_seg,
+                interpret=c.pallas_interpret)
         # hash / factorized representations have no dense vertex walk — they
         # stay on the reference path (the paper's NGP level-fallback)
         if c.kind == "dvgo":
@@ -173,7 +183,8 @@ class NerfModel:
         raise ValueError(c.kind)
 
     def query_field(self, params: dict, points: jnp.ndarray, dirs: jnp.ndarray,
-                    backend: Optional[str] = None
+                    backend: Optional[str] = None,
+                    seg: Optional[jnp.ndarray] = None, num_seg: int = 1
                     ) -> Tuple[jnp.ndarray, jnp.ndarray]:
         """(sigma [S], rgb [S,3]) at sample points."""
         if self.cfg.kind == "oracle":
@@ -181,28 +192,53 @@ class NerfModel:
             return scenes.scene_density(self.scene, points), scenes.scene_radiance(
                 self.scene, points, dirs)
         backend = backend or self.cfg.backend
-        feats = self.query_features(params, points, backend=backend)
+        feats = self.query_features(params, points, backend=backend,
+                                    seg=seg, num_seg=num_seg)
         if backend == "streaming" and self.cfg.decoder == "mlp":
             from repro.kernels import ops
 
-            return ops.nerf_mlp(feats, mlp._dir_enc(dirs), params["decoder"])
+            return ops.nerf_mlp(feats, mlp._dir_enc(dirs), params["decoder"],
+                                interpret=self.cfg.pallas_interpret)
         return mlp.decode(params["decoder"], feats, dirs, self.cfg.decoder_cfg)
 
     # ------------------------------------------------------------------
     def render_rays(self, params: dict, origins: jnp.ndarray, dirs: jnp.ndarray,
-                    key: Optional[jax.Array] = None
+                    key: Optional[jax.Array] = None,
+                    seg: Optional[jnp.ndarray] = None, num_seg: int = 1
                     ) -> Tuple[jnp.ndarray, jnp.ndarray]:
-        """Pixel-centric rendering. Returns (color [R,3], depth [R])."""
+        """Pixel-centric rendering. Returns (color [R,3], depth [R]).
+
+        ``seg`` ([R] int32) + static ``num_seg`` tag each ray with its
+        owning session for the flat ray-batch core — per-ray math is
+        segment-oblivious, only the streaming gather's RIT bucketing uses
+        them (see :meth:`query_features`).
+        """
         c = self.cfg
         pts, t_vals = rays.sample_along_rays(origins, dirs, c.near, c.far,
                                              c.num_samples, key)
         flat_pts = pts.reshape(-1, 3)
         flat_dirs = jnp.repeat(dirs, c.num_samples, axis=0)
-        sigma, rgb = self.query_field(params, flat_pts, flat_dirs)
+        sample_seg = (jnp.repeat(seg, c.num_samples)
+                      if seg is not None else None)
+        sigma, rgb = self.query_field(params, flat_pts, flat_dirs,
+                                      seg=sample_seg, num_seg=num_seg)
         sigma = sigma.reshape(-1, c.num_samples)
         rgb = rgb.reshape(-1, c.num_samples, 3)
         color, depth, _ = volrend.composite(sigma, rgb, t_vals, c.far, c.white_bkgd)
         return color, depth
+
+    def render_rays_flat(self, params: dict, origins: jnp.ndarray,
+                         dirs: jnp.ndarray,
+                         seg: Optional[jnp.ndarray] = None, num_seg: int = 1
+                         ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+        """Flat ray-batch rendering: rays from any number of sessions run
+        as ONE fused call (this replaces the vmapped
+        :meth:`render_rays_batch` internals — the Pallas kernels see one
+        large contiguous batch instead of S small per-session programs).
+        Per-ray outputs are independent of how rays are batched, so each
+        session's rows match its exclusive render bit-for-bit."""
+        return self.render_rays(params, origins.reshape(-1, 3),
+                                dirs.reshape(-1, 3), seg=seg, num_seg=num_seg)
 
     @property
     def render_rays_jit(self):
@@ -215,17 +251,34 @@ class NerfModel:
     def render_rays_batch(self, params: dict, origins: jnp.ndarray,
                           dirs: jnp.ndarray
                           ) -> Tuple[jnp.ndarray, jnp.ndarray]:
-        """Session-batched rendering: [S,R,3] rays -> ([S,R,3], [S,R]).
+        """Deprecated session-vmapped entry: [S,R,3] -> ([S,R,3], [S,R]).
 
-        One shared ``params`` (broadcast) serves every session row — the
-        multi-session engine's entry point into the NeRF."""
-        return jax.vmap(self.render_rays, in_axes=(None, 0, 0))(
-            params, origins, dirs)
+        Now a shim over :meth:`render_rays_flat` — the flat core renders
+        the same rays as ONE fused batch. Per-ray math is batch-oblivious
+        and the streaming gather keeps per-session RIT capacity via the
+        segment axis, so each session's rows match its unbatched render
+        (parity-tested; the engine-level bit-parity guarantees live in
+        :class:`repro.core.engine.DeviceSparwEngine`, whose flat stages
+        chunk at a fixed per-session quantum)."""
+        warnings.warn(
+            "NerfModel.render_rays_batch is deprecated; use "
+            "render_rays_flat (the flat ray-batch core) instead",
+            DeprecationWarning, stacklevel=2)
+        return self._render_rays_batch_impl(params, origins, dirs)
+
+    def _render_rays_batch_impl(self, params: dict, origins: jnp.ndarray,
+                                dirs: jnp.ndarray
+                                ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+        s, r = origins.shape[0], origins.shape[1]
+        seg = jnp.repeat(jnp.arange(s, dtype=jnp.int32), r)
+        col, dep = self.render_rays_flat(params, origins, dirs,
+                                         seg=seg, num_seg=s)
+        return col.reshape(s, r, 3), dep.reshape(s, r)
 
     @property
     def render_rays_batch_jit(self):
         if self._render_rays_batch_jit is None:
-            self._render_rays_batch_jit = jax.jit(self.render_rays_batch)
+            self._render_rays_batch_jit = jax.jit(self._render_rays_batch_impl)
         return self._render_rays_batch_jit
 
     def render_image(self, params: dict, cam: rays.Camera, c2w: jnp.ndarray,

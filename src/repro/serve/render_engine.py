@@ -26,15 +26,21 @@ Contracts inherited from the device engine:
   dispatches; frames and hole statistics are read back in
   :meth:`RenderServeEngine.finalize`, after every tick has been issued
   (transfer-guard tested).
-* **Bit-parity with single-session runs** — the batched window program is
-  the same computation ``vmap``-ed over sessions, with per-session
-  overflow→dense isolation, so every client receives exactly the frames an
-  exclusive :class:`~repro.core.engine.DeviceSparwEngine` would have
-  produced.
+* **Bit-parity with single-session runs** — a tick stages every slot's
+  window into the engine's **flat ray-batch core**
+  (:mod:`repro.core.raybatch`): all sessions' reference rays and
+  compacted hole samples fuse into single cross-session NeRF calls, and
+  an exclusive :class:`~repro.core.engine.DeviceSparwEngine` run is the
+  same flat program at S=1 — so every client receives exactly the frames
+  its exclusive run would have produced (per-session overflow→dense
+  isolation included).
 * **One compile for the engine lifetime** — slots make the batch shape
   ``[num_slots, window]`` static; ragged trajectories (sessions joining or
   leaving mid-run) are handled by pose padding + host-side masking, never
   by reshaping the device program.
+* **Session sharding** — with ``config.shard`` the flat batch's session
+  axis is laid over a device mesh (``num_slots`` divisible by
+  ``num_devices``; sessions pinned whole, scatters device-local).
 
 Per-session reference poses are extrapolated with
 :class:`~repro.core.schedule.RefPoseExtrapolator` — the streamed form of
@@ -134,7 +140,7 @@ class RenderServeEngine:
     """
 
     _LEGACY_DEFAULTS = dict(num_slots=4, window=4, phi_deg=None,
-                            hole_cap=None, ray_chunk=1 << 14)
+                            hole_cap=None, ray_chunk=RenderConfig.ray_chunk)
 
     def __init__(self, model, params: dict, cam: Optional[rays.Camera] = None,
                  num_slots=_UNSET, window=_UNSET, phi_deg=_UNSET,
@@ -268,11 +274,15 @@ class RenderServeEngine:
         return True
 
     # ------------------------------------------------------------------
-    def finalize(self) -> None:
-        """Materialize every pending tick's frames and hole statistics on
-        the host (the only device→host transfers in the engine)."""
+    def finalize(self, keep: int = 0) -> None:
+        """Materialize pending ticks' frames and hole statistics on the
+        host (the only device→host transfers in the engine). ``keep``
+        leaves that many of the *newest* ticks pending — :meth:`run` uses
+        it to drain completed ticks while one tick is still in flight."""
         hw = self.engine.cam.height * self.engine.cam.width
-        for assignments, res in self._pending:
+        split = max(len(self._pending) - keep, 0)
+        done, self._pending = self._pending[:split], self._pending[split:]
+        for assignments, res in done:
             counts = np.asarray(res.hole_counts)
             overflowed = np.asarray(res.overflowed)
             for s, assign in enumerate(assignments):
@@ -285,38 +295,49 @@ class RenderServeEngine:
                     sess.stats.record_frame(int(counts[s, j]), ovf, hw)
                 if sess.frames.count(None) == 0:
                     sess.done = True
-        self._pending = []
+
+    def _observe_tick(self, tick_t0: float, assignments: List[tuple],
+                      result: BatchedWindowResult) -> None:
+        """Block until a dispatched tick's device work completes and
+        attribute its wall-clock to the sessions it served (a short tail
+        window pays the whole tick over fewer frames)."""
+        jax.block_until_ready(result.frames)
+        tick_s = time.time() - tick_t0
+        for assign in assignments:
+            if assign is not None:
+                sess, idxs = assign
+                sess.frame_latencies_s.extend([tick_s / len(idxs)] * len(idxs))
 
     def run(self, sessions: List[RenderSession], max_ticks: int = 10_000
             ) -> Dict[str, object]:
         """Serve ``sessions`` to completion; returns aggregate metrics.
 
-        Each tick is timed to completion (``block_until_ready``) so
-        per-session frame latencies are wall-clock; the tick's wall time is
-        amortized over the frames the session actually received that tick.
+        The loop runs ONE tick ahead of the device: tick t+1 is dispatched
+        before blocking on tick t's completion, so host orchestration
+        (admission, pose staging) overlaps device compute instead of
+        serializing against it — the continuous-batching analogue of the
+        single-session engine's dispatch-then-read-back discipline.
+        Per-session frame latencies are still wall-clock per tick
+        (dispatch → observed completion), and completed ticks are drained
+        as the loop advances so device memory stays bounded at the
+        pipeline depth regardless of trajectory length. The zero-host-sync
+        contract applies to bare :meth:`step`, not :meth:`run`.
         """
         self.submit(sessions)
         start_ticks = self.num_ticks  # the engine may be reused across runs
         t0 = time.time()
+        in_flight = None  # (dispatch_t0, assignments, device result)
         while self.num_ticks - start_ticks < max_ticks:
             tick_t0 = time.time()
             if not self.step():
                 break
-            jax.block_until_ready(self._last_result.frames)
-            tick_s = time.time() - tick_t0
-            # attribute the tick's wall time to the sessions it served (a
-            # short tail window pays the whole tick over fewer frames)
-            served = self._pending[-1][0]
-            for assign in served:
-                if assign is not None:
-                    sess, idxs = assign
-                    sess.frame_latencies_s.extend(
-                        [tick_s / len(idxs)] * len(idxs))
-            # run() pays a sync per tick anyway (the timing block above), so
-            # drain the pending readback now — device memory stays bounded
-            # at one tick's frames regardless of trajectory length. The
-            # zero-host-sync contract applies to bare step(), not run().
-            self.finalize()
+            dispatched = (tick_t0, self._pending[-1][0], self._last_result)
+            if in_flight is not None:
+                self._observe_tick(*in_flight)
+                self.finalize(keep=1)  # drain all completed ticks
+            in_flight = dispatched
+        if in_flight is not None:
+            self._observe_tick(*in_flight)
         wall_s = time.time() - t0
         self.finalize()
         total_frames = sum(len(s.poses) for s in sessions)
@@ -338,4 +359,7 @@ class RenderServeEngine:
             "per_session": per_session,
             "complete": all(s.done for s in sessions),
             "policy": self.policy.name,
+            # session-sharding layout (1 = unsharded/single device)
+            "devices": (self.engine.mesh.devices.size
+                        if self.engine.mesh is not None else 1),
         }

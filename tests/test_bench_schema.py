@@ -12,10 +12,16 @@ VARIANT_KEYS = {"wall_s_cold", "wall_s_warm", "s_per_frame_cold",
                 "s_per_frame_warm", "fps_warm", "hole_fraction",
                 "mlp_work_fraction", "reference_renders"}
 CONFIG_KEYS = {"frames", "res", "window", "grid_res", "num_samples",
-               "hole_cap", "smoke", "config_fingerprint"}
+               "hole_cap", "smoke", "config_fingerprint",
+               "pallas_interpret"}
 MS_SEQ_KEYS = {"wall_s_cold", "wall_s_warm", "aggregate_fps_cold",
                "aggregate_fps_warm"}
 MS_BATCH_KEYS = MS_SEQ_KEYS | {"ticks", "per_session_warm"}
+FLAT_KEYS = {"sessions", "flat_ref_rays_per_tick",
+             "flat_hole_capacity_per_tick",
+             "speedup_batched_vs_sequential",
+             "speedup_batched_vs_sequential_warm", "warm_gate",
+             "warm_gate_met", "parity_bit_identical", "config_fingerprint"}
 
 
 def _load():
@@ -58,7 +64,7 @@ def test_multi_session_schema_and_gates():
         assert m["p50_latency_s"] > 0.0
         assert m["p95_latency_s"] >= m["p50_latency_s"]
     # serving N clients through ONE batched engine beats N exclusive
-    # engines end-to-end. The recorded baseline is 1.71×; the committed-file
+    # engines end-to-end. The recorded baseline is 2.17×; the committed-file
     # gate is kept loose (>1.0) because the ratio is hardware wall-clock —
     # the 1.5× acceptance gate is enforced by the bench run itself
     # (benchmarks/run.py exits nonzero for --sessions >= 4 below 1.5×).
@@ -67,3 +73,45 @@ def test_multi_session_schema_and_gates():
     # quality parity gates are deterministic: keep them tight
     assert ms["parity"]["min_psnr_batched_vs_single_db"] >= 60.0
     assert ms["parity"]["max_abs_psnr_delta_vs_single_db"] <= 1e-3
+
+
+def test_flat_batch_schema_and_gates():
+    """The flat ray-batch core's standing block: warm batched serving must
+    not lose to the sequential per-client loop (the refactor's acceptance
+    gate — the vmapped per-session pipeline sat at ~0.5× warm), with bit
+    parity against exclusive runs."""
+    data = _load()
+    assert "flat_batch" in data, \
+        "BENCH_render.json lost the flat ray-batch baseline"
+    fb = data["flat_batch"]
+    assert FLAT_KEYS <= set(fb)
+    assert fb["sessions"] >= 2
+    # flat geometry is consistent with the geometry the ticks ran with
+    hw = data["multi_session"]["res"] ** 2
+    assert fb["flat_ref_rays_per_tick"] == fb["sessions"] * hw
+    assert fb["flat_hole_capacity_per_tick"] == \
+        fb["sessions"] * data["multi_session"]["window"] * \
+        data["multi_session"]["hole_cap"]
+    assert fb["warm_gate"] == 1.0
+    assert fb["warm_gate_met"] is True
+    assert fb["speedup_batched_vs_sequential_warm"] >= 1.0
+    assert fb["parity_bit_identical"] is True
+    # the Pallas execution mode the numbers were produced under is recorded
+    assert isinstance(data["config"]["pallas_interpret"], bool)
+
+
+def test_sharded_schema_and_gates():
+    """Session sharding block: the probe forces host devices on the CPU
+    platform, so it is always runnable — the committed baseline must have
+    actually run it and proven the sharded program bit-identical to the
+    unsharded one (a failed probe records parity False and fails here)."""
+    data = _load()
+    assert "sharded" in data, \
+        "BENCH_render.json lost the session-sharding baseline"
+    sh = data["sharded"]
+    assert sh["available"] is True
+    assert sh.get("failed") is not True, sh.get("error")
+    assert sh["devices"] >= 2
+    assert sh["parity_bit_identical"] is True
+    assert sh["warm_wall_s_sharded"] > 0.0
+    assert sh["warm_wall_s_unsharded"] > 0.0

@@ -128,17 +128,36 @@ def test_prepare_streaming_caches_mv_table(scene):
     assert model.prepare_streaming(p1) is p1  # already prepared: no-op
 
 
-def test_compact_holes_matches_nonzero(baked_model, small_cam):
+def test_compact_holes_matches_nonzero(small_cam):
     """The cumsum compaction is the in-graph np.nonzero: same ids, order."""
-    model, params = baked_model
-    eng = engine.DeviceSparwEngine(model, params, config=RenderConfig(
-        camera=small_cam, window=2))
+    from repro.core import sparw
+
+    cap = 256
     rng = np.random.RandomState(0)
     hflat = jnp.asarray(rng.rand(small_cam.height * small_cam.width) < 0.07)
-    idx, count = jax.jit(eng._compact_holes)(hflat)
+    idx, count = jax.jit(sparw.compact_holes, static_argnums=1)(hflat, cap)
     want = np.nonzero(np.asarray(hflat))[0]
     assert int(count) == len(want)
     np.testing.assert_array_equal(np.asarray(idx)[: len(want)], want)
+
+
+def test_compact_holes_flat_matches_per_frame(small_cam):
+    """The flat segment-offset compaction is the per-frame compaction: each
+    (session, frame) slice bit-matches compact_holes on that frame."""
+    from repro.core import sparw
+
+    cap, s, n, hw = 64, 3, 2, small_cam.height * small_cam.width
+    rng = np.random.RandomState(1)
+    holes = jnp.asarray(rng.rand(s, n, hw) < 0.05)
+    idx_f, counts_f = jax.jit(sparw.compact_holes_flat,
+                              static_argnums=1)(holes, cap)
+    assert idx_f.shape == (s, n, cap) and counts_f.shape == (s, n)
+    for i in range(s):
+        for j in range(n):
+            idx1, count1 = sparw.compact_holes(holes[i, j], cap)
+            np.testing.assert_array_equal(np.asarray(idx_f[i, j]),
+                                          np.asarray(idx1))
+            assert int(counts_f[i, j]) == int(count1)
 
 
 def test_render_rays_jit_cached_once(baked_model):
