@@ -193,7 +193,10 @@ def bench_multi_session(sessions: int = 4, frames: int = 32, res: int = 64,
     from repro.utils import psnr
 
     if smoke:
-        frames, res, window = 8, 32, 4
+        # 16 frames (4 ticks/session): the hole-cap controller observes with
+        # a two-tick delay, so shorter runs never leave the max bucket and
+        # the pooled work-reduction gate would measure nothing
+        frames, res, window = 16, 32, 4
     grid_res = 32 if smoke else 48
     num_samples = 16 if smoke else 32
     hole_cap = max(res * res // 8, 128)
@@ -250,13 +253,36 @@ def bench_multi_session(sessions: int = 4, frames: int = 32, res: int = 64,
 
     # --- parity: per-session vs the exclusive single-session engine ------
     total = sessions * frames
+    baselines = [shared.render_baseline(t) for t in trajs]
     pair_psnr, psnr_delta = [], 0.0
     for i in range(sessions):
-        base = shared.render_baseline(trajs[i])
-        for sf, bf, gt in zip(seq_frames[i], bat_results[i].frames, base):
+        for sf, bf, gt in zip(seq_frames[i], bat_results[i].frames,
+                              baselines[i]):
             pair_psnr.append(float(psnr(sf, bf)))
             psnr_delta = max(psnr_delta, abs(float(psnr(bf, gt)) -
                                              float(psnr(sf, gt))))
+
+    # --- adaptive (ASDR-style) sampling sub-run: same fleet, same model,
+    # disagreement-driven hole rays at num_samples/coarse_factor; gated on
+    # the paper's <1 dB PSNR budget vs the non-adaptive serving output
+    ad = api.make_renderer(cfg.replace(adaptive_sampling=True),
+                           model=shared.model, params=shared.params)
+    ad_results, ad_metrics = ad.serve(requests, policy="fifo")
+    ad_delta = 0.0
+    for i in range(sessions):
+        for af, bf, gt in zip(ad_results[i].frames, bat_results[i].frames,
+                              baselines[i]):
+            ad_delta = max(ad_delta, abs(float(psnr(af, gt)) -
+                                         float(psnr(bf, gt))))
+    pool = bat_warm_metrics["pool"]
+    adaptive_block = {
+        "samples_per_tick": ad_metrics["pool"]["samples_per_tick"],
+        "work_reduction_vs_fixed_cap":
+            ad_metrics["pool"]["work_reduction_vs_fixed_cap"],
+        "max_abs_psnr_delta_vs_non_adaptive_db": ad_delta,
+        "psnr_gate_db": 1.0,
+        "psnr_gate_met": ad_delta <= 1.0,
+    }
 
     return {
         "sessions": sessions,
@@ -286,11 +312,18 @@ def bench_multi_session(sessions: int = 4, frames: int = 32, res: int = 64,
                 str(sid): {
                     "p50_latency_s": m["p50_latency_s"],
                     "p95_latency_s": m["p95_latency_s"],
+                    "hole_fraction": m["hole_fraction"],
                 } for sid, m in bat_warm_metrics["per_session"].items()
             },
         },
         "speedup_batched_vs_sequential": seq_cold_s / bat_cold_s,
         "speedup_batched_vs_sequential_warm": seq_warm_s / bat_warm_s,
+        # pooled tick-level capacity: sparse NeRF samples reserved per tick
+        # (steady-state last tick) vs the fixed-cap worst case, pool
+        # occupancy, and the recompiles spent on the pow2 bucket ladder
+        "samples_per_tick": pool["samples_per_tick"],
+        "pool": pool,
+        "adaptive": adaptive_block,
         "parity": {
             "min_psnr_batched_vs_single_db": float(np.min(pair_psnr)),
             "max_abs_psnr_delta_vs_single_db": psnr_delta,
@@ -307,10 +340,22 @@ def flat_batch_block(ms: dict) -> dict:
     s, n = ms["sessions"], ms["window"]
     hw = ms["res"] * ms["res"]
     warm = ms["speedup_batched_vs_sequential_warm"]
+    pool = ms["pool"]
+    fixed_cap = s * n * ms["hole_cap"]
+    reduction = pool["work_reduction_vs_fixed_cap"]
     return {
         "sessions": s,
         "flat_ref_rays_per_tick": s * hw,  # ONE fused reference render
-        "flat_hole_capacity_per_tick": s * n * ms["hole_cap"],
+        # the tick's sparse batch is POOLED: the steady-state hole capacity
+        # actually reserved (ray slots, last tick) vs the fixed-cap worst
+        # case the pre-pooling core materialized every tick
+        "flat_hole_capacity_per_tick": int(round(fixed_cap / reduction)),
+        "flat_hole_capacity_per_tick_fixed_cap": fixed_cap,
+        "pool_work_reduction_vs_fixed_cap": reduction,
+        "pool_utilization": pool["utilization"],
+        "pool_recompiles": pool["recompiles"],
+        "pool_ladder_size": pool["ladder_size"],
+        "samples_per_tick": ms["samples_per_tick"],
         "speedup_batched_vs_sequential": ms["speedup_batched_vs_sequential"],
         "speedup_batched_vs_sequential_warm": warm,
         "warm_gate": 1.0,
@@ -485,6 +530,32 @@ def main() -> None:
                 print(f"FAIL: warm batched-vs-sequential "
                       f"{ms['speedup_batched_vs_sequential_warm']:.2f} < 1.0")
                 sys.exit(1)
+            # pooled capacity must fundamentally reduce the work: >= 4x
+            # fewer sparse samples per steady-state tick than fixed-cap
+            if ms["pool"]["work_reduction_vs_fixed_cap"] < 4.0:
+                print(f"FAIL: pooled work reduction "
+                      f"{ms['pool']['work_reduction_vs_fixed_cap']:.2f} "
+                      f"< 4.0 vs the fixed-cap baseline")
+                sys.exit(1)
+        # work-reduction gate (all session counts, smoke included):
+        # pooled samples_per_tick must stay <= 0.5x the fixed-cap batch
+        if ms["samples_per_tick"] > 0.5 * ms["pool"]["samples_per_tick_fixed_cap"]:
+            print(f"FAIL: pooled samples_per_tick {ms['samples_per_tick']} "
+                  f"> 0.5x fixed-cap "
+                  f"{ms['pool']['samples_per_tick_fixed_cap']}")
+            sys.exit(1)
+        # bucket-ladder discipline: resizes may recompile at most once per
+        # pow2 rung
+        if ms["pool"]["recompiles"] > ms["pool"]["ladder_size"]:
+            print(f"FAIL: {ms['pool']['recompiles']} pool recompiles exceed "
+                  f"the bucket ladder ({ms['pool']['ladder_size']})")
+            sys.exit(1)
+        # adaptive sampling rides the paper's <1 dB PSNR budget
+        if not ms["adaptive"]["psnr_gate_met"]:
+            print(f"FAIL: adaptive-sampling PSNR delta "
+                  f"{ms['adaptive']['max_abs_psnr_delta_vs_non_adaptive_db']:.3f} "
+                  f"dB > 1.0 dB")
+            sys.exit(1)
         if not res["sharded"].get("parity_bit_identical"):
             print(f"FAIL: sharded render_windows is not bit-identical "
                   f"(probe error: {res['sharded'].get('error', 'none')})")

@@ -61,4 +61,28 @@ if not data["sharded"].get("parity_bit_identical"):
     sys.exit("FAIL: sharded render_windows is not bit-identical "
              f"(probe error: {data['sharded'].get('error', 'none')})")
 PY
+
+echo "== pooled-capacity work-reduction gate (samples/tick <= 0.5x fixed) =="
+# Pooling exists to stop every tick materializing the worst-case
+# [S*N*cap] sparse batch: at steady state the pooled samples_per_tick
+# must come in at or under half the fixed-cap baseline, adaptive
+# sampling must hold the paper's <1 dB PSNR budget, and walking the
+# pow2 bucket ladder may recompile at most once per rung.
+python - <<'PY'
+import json, sys
+ms = json.load(open("/tmp/BENCH_render_ci.json"))["multi_session"]
+pool = ms["pool"]
+spt, fixed = pool["samples_per_tick"], pool["samples_per_tick_fixed_cap"]
+print(f"pooled samples/tick (smoke): {spt} vs fixed-cap {fixed} "
+      f"({pool['work_reduction_vs_fixed_cap']:.1f}x reduction)")
+if spt > 0.5 * fixed:
+    sys.exit(f"FAIL: pooled samples_per_tick {spt} > 0.5x fixed-cap {fixed}")
+if pool["recompiles"] > pool["ladder_size"]:
+    sys.exit(f"FAIL: {pool['recompiles']} pool recompiles exceed the "
+             f"bucket ladder ({pool['ladder_size']})")
+if not ms["adaptive"]["psnr_gate_met"]:
+    sys.exit("FAIL: adaptive-sampling PSNR delta "
+             f"{ms['adaptive']['max_abs_psnr_delta_vs_non_adaptive_db']:.3f}"
+             " dB > 1.0 dB")
+PY
 echo "CI OK"

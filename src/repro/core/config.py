@@ -58,7 +58,8 @@ class RenderStats:
     frames: int = 0
     reference_renders: int = 0
     warped_pixels: int = 0
-    sparse_pixels: int = 0
+    sparse_pixels: int = 0    # hole pixels actually NeRF-rendered
+    fallback_pixels: int = 0  # extra non-hole pixels re-rendered on overflow
     total_pixels: int = 0
     hole_fractions: List[float] = field(default_factory=list)
 
@@ -73,17 +74,99 @@ class RenderStats:
         if self.total_pixels == 0:
             return 1.0
         full_equiv = self.reference_renders * (self.total_pixels / max(self.frames, 1))
-        return (full_equiv + self.sparse_pixels) / self.total_pixels
+        return (full_equiv + self.sparse_pixels +
+                self.fallback_pixels) / self.total_pixels
 
     def record_frame(self, hole_count: int, overflowed: bool, hw: int) -> None:
         """Accumulate one rendered frame's hole statistics (shared by the
         single-session trajectory readback and the serving engine's
-        finalize — the overflow accounting must stay identical)."""
+        finalize — the overflow accounting must stay identical).
+
+        ``sparse_pixels`` counts hole pixels that were NeRF-rendered — the
+        dense fallback renders them too, so it always accrues
+        ``hole_count``. The fallback's *extra* work (re-rendering pixels
+        the warp already covered) lands in ``fallback_pixels``; their sum
+        is the frame's total MLP work beyond the reference render.
+        """
         self.frames += 1
         self.total_pixels += hw
         self.hole_fractions.append(hole_count / hw)
-        self.sparse_pixels += hw if overflowed else hole_count
+        self.sparse_pixels += hole_count
+        if overflowed:
+            self.fallback_pixels += hw - hole_count
         self.warped_pixels += hw - hole_count
+
+
+# ---------------------------------------------------------------------------
+# HoleCapController — EWMA hole-fraction control of the pooled capacity
+# ---------------------------------------------------------------------------
+
+
+def next_pow2(n: int) -> int:
+    """Smallest power of two >= max(n, 1)."""
+    return 1 << max(int(n) - 1, 0).bit_length()
+
+
+@dataclass
+class HoleCapController:
+    """Per-session EWMA controller of the pooled tick-level hole capacity.
+
+    The pooled flat batch reserves one ``[bucket]`` region per session
+    instead of the worst-case ``window * hole_cap`` rows. This controller
+    tracks the session's observed *window hole totals* with an EWMA and
+    emits the region size: the EWMA times a ``safety`` headroom factor,
+    quantized to a power-of-two bucket and clamped to
+    ``[min_bucket, max_bucket]``. Quantization bounds recompiles — the
+    compiled program is static per bucket, and the whole ladder has only
+    ``ladder_size`` rungs. Before the first observation the bucket is the
+    worst case (``window * hole_cap`` rounded up), so pooling can never
+    overflow a session the fixed-capacity batch would have held.
+
+    Observation is host-side between ticks (fed from the same true hole
+    counts :meth:`RenderStats.record_frame` consumes) and runs at the
+    serving loop's delayed cadence: the window dispatched at tick ``t``
+    sees observations of windows ``<= t-2``. The exclusive
+    single-session path mirrors that cadence exactly, which keeps the
+    overflow decisions — and therefore bit parity — aligned across arms.
+
+    ``fixed`` (from ``RenderConfig.pool_bucket`` /
+    ``RenderRequest.pool_bucket``) pins the bucket, disabling adaptation.
+    """
+
+    worst: int                    # worst-case window hole total (N * cap)
+    min_bucket: int = 128
+    safety: float = 1.25
+    alpha: float = 0.4            # EWMA weight of the newest observation
+    fixed: Optional[int] = None   # pin the bucket (no adaptation)
+
+    def __post_init__(self) -> None:
+        self.max_bucket = max(next_pow2(max(self.worst, 1)), self.min_bucket)
+        self.ewma: Optional[float] = None
+
+    def reset(self) -> None:
+        self.ewma = None
+
+    def observe(self, window_total: int) -> None:
+        t = float(window_total)
+        self.ewma = (t if self.ewma is None
+                     else self.alpha * t + (1.0 - self.alpha) * self.ewma)
+
+    @property
+    def bucket(self) -> int:
+        if self.fixed is not None:
+            return self.fixed
+        if self.ewma is None:
+            return self.max_bucket  # worst case until the first observation
+        target = next_pow2(int(np.ceil(self.ewma * self.safety)))
+        return min(max(target, self.min_bucket), self.max_bucket)
+
+    @property
+    def ladder_size(self) -> int:
+        """Number of distinct buckets the controller can ever emit — the
+        bound on pool-resize recompiles."""
+        if self.fixed is not None:
+            return 1
+        return int(np.log2(self.max_bucket // self.min_bucket)) + 1
 
 
 # ---------------------------------------------------------------------------
@@ -162,6 +245,26 @@ class RenderConfig:
     # :meth:`resolved_pallas_interpret`.
     pallas_interpret: Optional[bool] = None
 
+    # --- pooled tick-level hole capacity + adaptive sampling --------------
+    # pool_holes=True replaces the worst-case [S*N*cap] sparse batch with
+    # one [S * bucket] pooled batch whose per-session bucket is driven by a
+    # HoleCapController (EWMA of observed window hole totals, power-of-two
+    # quantized). pool_bucket pins the bucket (no adaptation); the
+    # remaining knobs parameterize the controller.
+    pool_holes: bool = True
+    pool_bucket: Optional[int] = None   # fixed bucket override (pow2)
+    pool_min_bucket: int = 128          # smallest bucket (pow2, ladder floor)
+    pool_safety: float = 1.25           # headroom over the EWMA estimate
+    pool_ewma_alpha: float = 0.4        # EWMA weight of the newest window
+    # ASDR-style disagreement-driven sampling on the pooled hole batch:
+    # low warped-neighborhood-variance holes render at
+    # num_samples // coarse_factor; high-disagreement holes keep the full
+    # budget. Off by default — the bit-parity gates cover the off state;
+    # on, the contract is the paper's <1 dB PSNR budget.
+    adaptive_sampling: bool = False
+    adaptive_var_threshold: float = 0.0002  # neighborhood radiance variance
+    coarse_factor: int = 4              # sample reduction for low-var holes
+
     # --- model shape (what repro.api.make_renderer builds) ----------------
     model_kind: str = "dvgo"
     backend: str = "reference"  # reference | streaming (Pallas hot path)
@@ -183,6 +286,33 @@ class RenderConfig:
         if self.hole_cap is not None and self.hole_cap < 1:
             raise ValueError(f"hole_cap must be >= 1 (or None for the "
                              f"default), got {self.hole_cap}")
+        if self.pool_min_bucket < 2 or \
+                next_pow2(self.pool_min_bucket) != self.pool_min_bucket:
+            raise ValueError(f"pool_min_bucket must be a power of two >= 2, "
+                             f"got {self.pool_min_bucket}")
+        if self.pool_bucket is not None and (
+                self.pool_bucket < 1 or
+                next_pow2(self.pool_bucket) != self.pool_bucket):
+            raise ValueError(f"pool_bucket must be a power of two >= 1 (or "
+                             f"None for adaptive control), got "
+                             f"{self.pool_bucket}")
+        if self.pool_safety < 1.0:
+            raise ValueError(
+                f"pool_safety must be >= 1.0, got {self.pool_safety}")
+        if not 0.0 < self.pool_ewma_alpha <= 1.0:
+            raise ValueError(f"pool_ewma_alpha must be in (0, 1], got "
+                             f"{self.pool_ewma_alpha}")
+        if self.adaptive_sampling and not self.pool_holes:
+            raise ValueError("adaptive_sampling requires pool_holes=True "
+                             "(it subdivides the pooled hole batch)")
+        if self.coarse_factor < 2:
+            raise ValueError(
+                f"coarse_factor must be >= 2, got {self.coarse_factor}")
+        if self.adaptive_sampling and \
+                self.num_samples % self.coarse_factor != 0:
+            raise ValueError(
+                f"adaptive_sampling needs num_samples ({self.num_samples}) "
+                f"divisible by coarse_factor ({self.coarse_factor})")
         if self.shard is not None and self.shard.enabled \
                 and self.num_slots % self.shard.num_devices != 0:
             raise ValueError(
@@ -222,6 +352,8 @@ class RenderConfig:
             kw["window"] = request.window
         if request.hole_cap is not None:
             kw["hole_cap"] = request.hole_cap
+        if request.pool_bucket is not None:
+            kw["pool_bucket"] = request.pool_bucket
         return dataclasses.replace(self, **kw) if kw else self
 
 
@@ -248,6 +380,7 @@ class RenderRequest:
     sid: Optional[int] = None
     window: Optional[int] = None
     hole_cap: Optional[int] = None
+    pool_bucket: Optional[int] = None  # pin this session's pooled bucket
     priority: int = 0
     deadline_ms: Optional[float] = None
 
@@ -260,6 +393,11 @@ class RenderRequest:
         if self.hole_cap is not None and self.hole_cap < 1:
             raise ValueError(
                 f"hole_cap override must be >= 1, got {self.hole_cap}")
+        if self.pool_bucket is not None and (
+                self.pool_bucket < 1 or
+                next_pow2(self.pool_bucket) != self.pool_bucket):
+            raise ValueError(f"pool_bucket override must be a power of two "
+                             f">= 1, got {self.pool_bucket}")
 
 
 @dataclass(frozen=True, eq=False)

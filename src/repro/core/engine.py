@@ -60,6 +60,7 @@ import numpy as np
 from repro.core import raybatch, schedule, sparw
 from repro.core.config import (  # noqa: F401 (RenderStats re-export)
     _UNSET,
+    HoleCapController,
     RenderConfig,
     RenderStats,
     legacy_config,
@@ -74,6 +75,8 @@ class WindowResult(NamedTuple):
     frames: jnp.ndarray  # [N, H, W, 3]
     hole_counts: jnp.ndarray  # [N] int32 — true (uncapped) hole counts
     overflowed: jnp.ndarray  # [] bool — hole_cap exceeded, dense fallback ran
+    fine_counts: jnp.ndarray  # [N] int32 — full-budget holes (== hole_counts
+    #                           unless adaptive sampling split the pool)
 
 
 class BatchedWindowResult(NamedTuple):
@@ -86,6 +89,9 @@ class BatchedWindowResult(NamedTuple):
     frames: jnp.ndarray  # [S, N, H, W, 3]
     hole_counts: jnp.ndarray  # [S, N] int32 — true (uncapped) hole counts
     overflowed: jnp.ndarray  # [S] bool — per-session dense-fallback flag
+    fine_counts: jnp.ndarray  # [S, N] int32 — full-budget holes (feeds the
+    #                           fine-pool controller; == hole_counts unless
+    #                           adaptive sampling split the pool)
 
 
 class DeviceSparwEngine:
@@ -137,20 +143,75 @@ class DeviceSparwEngine:
         if self.mesh is not None:
             self.params = jax.device_put(
                 self.params, raybatch.replicated_sharding(self.mesh))
+        # --- pooled tick-level hole capacity + adaptive sampling ----------
+        # One [S * bucket] pooled sparse batch per tick instead of the
+        # worst-case [S*N*cap]; the bucket is a STATIC jit argument (pow2
+        # ladder — bounded recompiles) while the per-session effective pool
+        # capacities ride as traced [S] inputs, mirroring win_lens/caps.
+        self.pool_holes = bool(config.pool_holes)
+        self.pool_min_bucket = int(config.pool_min_bucket)
+        self.adaptive_sampling = bool(config.adaptive_sampling)
+        self.adaptive_var_threshold = float(config.adaptive_var_threshold)
+        self.coarse_factor = int(config.coarse_factor)
+        if self.adaptive_sampling and \
+                model.cfg.num_samples % self.coarse_factor != 0:
+            raise ValueError(
+                f"adaptive_sampling needs the model's num_samples "
+                f"({model.cfg.num_samples}) divisible by coarse_factor "
+                f"({self.coarse_factor})")
+        ctl_kw = dict(min_bucket=self.pool_min_bucket,
+                      safety=config.pool_safety,
+                      alpha=config.pool_ewma_alpha, fixed=config.pool_bucket)
+        worst = self.window * self.hole_cap
+        self.pool_ctl = HoleCapController(worst=worst, **ctl_kw)
+        self.pool_ctl_coarse = HoleCapController(worst=worst, **ctl_kw)
+        # every distinct (bucket, bucket_coarse) this engine compiled for —
+        # tests assert the jit cache size tracks it (and stays <= ladder)
+        self.pool_buckets_used: set = set()
         self.num_window_calls = 0  # jitted window invocations (tests assert)
-        self._windows_jit = jax.jit(self._render_windows)
+        self._windows_jit = jax.jit(self._render_windows,
+                                    static_argnums=(7, 8))
         # staged full-window/full-cap defaults per (S, N) so a default
         # render_windows call never rebuilds them (and the serving engine's
         # explicit arrays follow the same staging discipline)
         self._default_masks: Dict[Tuple[int, int],
                                   Tuple[jnp.ndarray, jnp.ndarray]] = {}
+        # staged per-session pool capacities per (S, bucket, bucket_coarse)
+        self._default_pool_caps: Dict[Tuple[int, int, int],
+                                      Tuple[jnp.ndarray, jnp.ndarray]] = {}
+
+    # ------------------------------------------------------------------
+    @property
+    def pool_ladder_size(self) -> int:
+        """Bound on distinct (bucket, bucket_coarse) compile targets."""
+        fine = self.pool_ctl.ladder_size
+        return fine * (self.pool_ctl_coarse.ladder_size
+                       if self.adaptive_sampling else 1)
+
+    def _current_buckets(self) -> Tuple[int, int]:
+        """The static pool bucket(s) the next dispatch compiles against
+        (0 disables the pooled path / the coarse sub-pool)."""
+        if not self.pool_holes:
+            return 0, 0
+        return (self.pool_ctl.bucket,
+                self.pool_ctl_coarse.bucket if self.adaptive_sampling else 0)
+
+    def _staged_pool_caps(self, s: int, bucket: int, bucket_coarse: int
+                          ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+        staged = self._default_pool_caps.get((s, bucket, bucket_coarse))
+        if staged is None:
+            staged = (jnp.full((s,), bucket, jnp.int32),
+                      jnp.full((s,), bucket_coarse, jnp.int32))
+            self._default_pool_caps[(s, bucket, bucket_coarse)] = staged
+        return staged
 
     # ------------------------------------------------------------------
     # fully in-graph primitives (all flat: no per-session vmap)
     # ------------------------------------------------------------------
     def _render_rays_flat(self, params: dict, o: jnp.ndarray, d: jnp.ndarray,
                           seg: Optional[jnp.ndarray], num_seg: int,
-                          quantum: int) -> Tuple[jnp.ndarray, jnp.ndarray]:
+                          quantum: int, num_samples: Optional[int] = None
+                          ) -> Tuple[jnp.ndarray, jnp.ndarray]:
         """ONE fused NeRF call over a flat [F,3] cross-session ray batch,
         chunked via ``lax.map`` — static shapes (pad + slice), bounded
         memory, no host loop. Chunk-padding rays are tagged with the dump
@@ -189,13 +250,15 @@ class DeviceSparwEngine:
         d = jnp.pad(d, ((0, npad - n), (0, 0)))
         if seg is None:
             col, dep = jax.lax.map(
-                lambda od: self.model.render_rays(params, od[0], od[1]),
+                lambda od: self.model.render_rays(
+                    params, od[0], od[1], num_samples=num_samples),
                 (o.reshape(-1, c, 3), d.reshape(-1, c, 3)))
         else:
             seg = jnp.pad(seg, (0, npad - n), constant_values=num_seg)
             col, dep = jax.lax.map(
                 lambda ods: self.model.render_rays(
-                    params, ods[0], ods[1], seg=ods[2], num_seg=num_seg),
+                    params, ods[0], ods[1], seg=ods[2], num_seg=num_seg,
+                    num_samples=num_samples),
                 (o.reshape(-1, c, 3), d.reshape(-1, c, 3),
                  seg.reshape(-1, c)))
         return col.reshape(npad, 3)[:n], dep.reshape(npad)[:n]
@@ -214,9 +277,42 @@ class DeviceSparwEngine:
                                         quantum=n * hw)
         return col.reshape(s, n, hw, 3)
 
+    def _pooled_fill(self, params: dict, tgt_poses: jnp.ndarray,
+                     holes: jnp.ndarray, live: jnp.ndarray, bucket: int,
+                     num_samples: Optional[int] = None
+                     ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+        """ONE fused sparse fill over a POOLED [S * bucket] hole batch.
+
+        All of a session's window holes compact into one contiguous
+        ``bucket``-slot region (statistical pooling across the window
+        instead of worst-case per-frame capacity), render through one
+        fused NeRF call, and segment-scatter back. The fill chunks at
+        ``quantum=pool_min_bucket`` — a bucket-INDEPENDENT constant — so
+        resizing the pool bucket never changes the compiled chunk body
+        and every ray's math stays bit-identical across ladder steps
+        (session regions start at multiples of the chunk size because
+        ``bucket`` is a pow2 >= pool_min_bucket >= the chunk size).
+        Returns ([S, N, HW, 3] sparse frames, [S] true live hole totals).
+        """
+        s, n = tgt_poses.shape[0], tgt_poses.shape[1]
+        hw = self.cam.height * self.cam.width
+        addr, totals = sparw.compact_holes_pooled(holes, bucket, live)
+        batch, flat_addr = raybatch.pack_hole_rays_pooled(
+            self.cam, tgt_poses, addr)
+        fill_col, _ = self._render_rays_flat(
+            params, batch.origins, batch.dirs,
+            batch.seg if self._seg_aware else None, s,
+            quantum=self.pool_min_bucket, num_samples=num_samples)
+        valid = (jnp.arange(bucket)[None, :] < totals[:, None]).reshape(-1)
+        sparse = raybatch.scatter_segments(fill_col, flat_addr, valid,
+                                           s * n * hw)
+        return sparse.reshape(s, n, hw, 3), totals
+
     def _render_windows(self, params: dict, ref_poses: jnp.ndarray,
                         tgt_poses: jnp.ndarray, win_lens: jnp.ndarray,
-                        caps: jnp.ndarray) -> BatchedWindowResult:
+                        caps: jnp.ndarray, pool_caps: jnp.ndarray,
+                        pool_caps_coarse: jnp.ndarray, bucket: int,
+                        bucket_coarse: int) -> BatchedWindowResult:
         """S concurrent sessions' windows — ONE traced function built from
         flat cross-session stages (see the module docstring for the ①–④
         walk-through).
@@ -235,6 +331,17 @@ class DeviceSparwEngine:
         session's effective hole capacity (≤ the engine's static
         ``hole_cap``, which fixes the compaction shape). Both are traced
         inputs — value changes never recompile the program.
+
+        ``bucket`` / ``bucket_coarse`` are STATIC pool-bucket sizes (pow2
+        ladder, so the recompile count is bounded by the ladder);
+        ``pool_caps`` / ``pool_caps_coarse`` [S] are the traced
+        per-session effective pool capacities (a session's own controller
+        bucket — it overflows to dense when its window total exceeds its
+        own budget even if the tick's shared bucket is larger, keeping
+        the overflow decision identical to its exclusive run).
+        ``bucket == 0`` selects the legacy per-frame fixed-capacity
+        batch; ``bucket_coarse == 0`` disables the adaptive coarse
+        sub-pool.
         """
         s, n = tgt_poses.shape[0], tgt_poses.shape[1]
         h, w = self.cam.height, self.cam.width
@@ -247,26 +354,55 @@ class DeviceSparwEngine:
             ref.seg if self._seg_aware else None, s, quantum=hw)
         rgb_ref = col.reshape(s, h, w, 3)
         dep_ref = dep.reshape(s, h, w)
-        # ②③ one flat warp scatter pass + flat fixed-capacity compaction
+        # ②③ one flat warp scatter pass + flat hole compaction
         warped = sparw.warp_frames_flat(rgb_ref, dep_ref, ref_poses,
                                         tgt_poses, self.cam,
                                         phi_deg=self.phi_deg)
         holes = warped.holes.reshape(s, n, hw)
-        idx, counts = sparw.compact_holes_flat(holes, cap)
         # per-session window-length mask: padded frames past win_lens[s]
         # must not trip that session's dense fallback
         live = jnp.arange(n)[None, :] < win_lens[:, None]  # [S, N]
-        overflowed = jnp.max(jnp.where(live, counts, 0), axis=1) > caps  # [S]
-        # ④ ONE fused sparse fill over the tick's flat hole batch, then
-        # segment-scatter back to frames
-        batch, addr = raybatch.pack_hole_rays(self.cam, tgt_poses, idx)
-        fill_col, _ = self._render_rays_flat(
-            params, batch.origins, batch.dirs,
-            batch.seg if self._seg_aware else None, s, quantum=n * cap)
-        valid = (jnp.arange(cap)[None, None, :] < counts[..., None])
-        sparse = raybatch.scatter_segments(
-            fill_col, addr, valid.reshape(-1), s * n * hw)
-        sparse = sparse.reshape(s, n, hw, 3)
+        counts = jnp.sum(holes & live[:, :, None], axis=2)  # [S, N] true
+        frame_over = jnp.max(jnp.where(live, counts, 0), axis=1) > caps
+        fine_counts = counts
+        if bucket == 0:
+            # legacy per-frame fixed-capacity flat batch [S*N*cap]
+            idx, _ = sparw.compact_holes_flat(holes, cap)
+            overflowed = frame_over
+            # ④ ONE fused sparse fill over the tick's flat hole batch,
+            # then segment-scatter back to frames
+            batch, addr = raybatch.pack_hole_rays(self.cam, tgt_poses, idx)
+            fill_col, _ = self._render_rays_flat(
+                params, batch.origins, batch.dirs,
+                batch.seg if self._seg_aware else None, s, quantum=n * cap)
+            valid = (jnp.arange(cap)[None, None, :] < counts[..., None])
+            sparse = raybatch.scatter_segments(
+                fill_col, addr, valid.reshape(-1), s * n * hw)
+            sparse = sparse.reshape(s, n, hw, 3)
+        elif bucket_coarse == 0:
+            # ④ pooled: the whole tick's holes share ONE [S*bucket] batch
+            sparse, totals = self._pooled_fill(params, tgt_poses, holes,
+                                               live, bucket)
+            overflowed = frame_over | (totals > pool_caps)
+        else:
+            # ④ pooled + ASDR-style adaptive sampling: split holes by
+            # warped-neighborhood disagreement — unreliable (few warped
+            # neighbors / high radiance variance) rays keep the full
+            # sample budget, agreeing rays drop to num_samples/coarse_factor
+            var, cnt = sparw.warp_disagreement(warped.rgb, warped.holes)
+            fine_m = warped.holes & (
+                (cnt < 3) | (var > self.adaptive_var_threshold))
+            fine = fine_m.reshape(s, n, hw) & live[:, :, None]
+            coarse = holes & live[:, :, None] & ~fine
+            sparse_f, tot_f = self._pooled_fill(params, tgt_poses, fine,
+                                                live, bucket)
+            sparse_c, tot_c = self._pooled_fill(
+                params, tgt_poses, coarse, live, bucket_coarse,
+                num_samples=self.model.cfg.num_samples // self.coarse_factor)
+            sparse = sparse_f + sparse_c  # disjoint masks — no overlap
+            overflowed = (frame_over | (tot_f > pool_caps)
+                          | (tot_c > pool_caps_coarse))
+            fine_counts = jnp.sum(fine, axis=2)
         dense = jax.lax.cond(
             jnp.any(overflowed),
             lambda _: self._dense_fill_flat(params, tgt_poses),
@@ -276,7 +412,8 @@ class DeviceSparwEngine:
         frames = jnp.where(holes[..., None], fill,
                            warped.rgb.reshape(s, n, hw, 3))
         return BatchedWindowResult(frames.reshape(s, n, h, w, 3),
-                                   counts.astype(jnp.int32), overflowed)
+                                   counts.astype(jnp.int32), overflowed,
+                                   fine_counts.astype(jnp.int32))
 
     # ------------------------------------------------------------------
     def _staged_masks(self, s: int, n: int
@@ -296,18 +433,27 @@ class DeviceSparwEngine:
         re-traces only per distinct N."""
         n = tgt_poses.shape[0]
         win_lens, caps = self._staged_masks(1, n)
+        bucket, bucket_c = self._current_buckets()
+        pool_caps, pool_caps_c = self._staged_pool_caps(1, bucket, bucket_c)
+        self.pool_buckets_used.add((bucket, bucket_c))
         self.num_window_calls += 1
         res = self._windows_jit(self.params, ref_pose[None], tgt_poses[None],
-                                win_lens, caps)
+                                win_lens, caps, pool_caps, pool_caps_c,
+                                bucket, bucket_c)
         # static squeezes (not [0]-indexing, which would stage a host index
         # constant and trip the zero-host-sync transfer guard)
         return WindowResult(jnp.squeeze(res.frames, 0),
                             jnp.squeeze(res.hole_counts, 0),
-                            jnp.squeeze(res.overflowed, 0))
+                            jnp.squeeze(res.overflowed, 0),
+                            jnp.squeeze(res.fine_counts, 0))
 
     def render_windows(self, ref_poses: jnp.ndarray, tgt_poses: jnp.ndarray,
                        win_lens: Optional[jnp.ndarray] = None,
-                       caps: Optional[jnp.ndarray] = None
+                       caps: Optional[jnp.ndarray] = None,
+                       pool_caps: Optional[jnp.ndarray] = None,
+                       pool_caps_coarse: Optional[jnp.ndarray] = None,
+                       bucket: Optional[int] = None,
+                       bucket_coarse: Optional[int] = None
                        ) -> BatchedWindowResult:
         """Render S sessions' warp windows ([S,4,4] refs vs [S,N,4,4]
         targets) as a single jitted call — the multi-session serving tick.
@@ -327,35 +473,72 @@ class DeviceSparwEngine:
             staged = self._staged_masks(s, n)
             win_lens = staged[0] if win_lens is None else win_lens
             caps = staged[1] if caps is None else caps
+        if bucket is None or bucket_coarse is None:
+            cur = self._current_buckets()
+            bucket = cur[0] if bucket is None else bucket
+            bucket_coarse = cur[1] if bucket_coarse is None else bucket_coarse
+        if pool_caps is None or pool_caps_coarse is None:
+            staged = self._staged_pool_caps(s, bucket, bucket_coarse)
+            pool_caps = staged[0] if pool_caps is None else pool_caps
+            pool_caps_coarse = (staged[1] if pool_caps_coarse is None
+                                else pool_caps_coarse)
         if self.mesh is not None and s > 1:
             ndev = self.mesh.devices.size
             if s % ndev != 0:
                 raise ValueError(
                     f"render_windows: {s} sessions cannot shard evenly "
                     f"over {ndev} devices")
-            ref_poses, tgt_poses, win_lens, caps = \
-                raybatch.shard_session_inputs(
-                    self.mesh, ref_poses, tgt_poses, win_lens, caps)
+            (ref_poses, tgt_poses, win_lens, caps, pool_caps,
+             pool_caps_coarse) = raybatch.shard_session_inputs(
+                self.mesh, ref_poses, tgt_poses, win_lens, caps,
+                pool_caps, pool_caps_coarse)
+        self.pool_buckets_used.add((bucket, bucket_coarse))
         self.num_window_calls += 1
         return self._windows_jit(self.params, ref_poses, tgt_poses,
-                                 win_lens, caps)
+                                 win_lens, caps, pool_caps,
+                                 pool_caps_coarse, bucket, bucket_coarse)
+
+    def _observe_window(self, res) -> None:
+        """Feed one finished window's hole totals to the pool controllers
+        (host-side, between dispatches — the compiled program never sees
+        the controller)."""
+        if not self.pool_holes:
+            return
+        counts = np.asarray(res.hole_counts)
+        fine = np.asarray(res.fine_counts)
+        self.pool_ctl.observe(int(fine.sum()))
+        if self.adaptive_sampling:
+            self.pool_ctl_coarse.observe(int(counts.sum() - fine.sum()))
 
     def render_trajectory(self, poses: List[jnp.ndarray]
                           ) -> Tuple[List[jnp.ndarray], RenderStats]:
         """SPARW rendering of a pose trajectory (offtraj schedule).
 
-        Dispatches every window before reading any statistic back, so the
-        only host syncs are the final stats/frames conversion — never inside
-        a window.
+        Statistics read back with a TWO-window pipeline delay: before
+        dispatching window ``i`` the pool controllers observe window
+        ``i-2`` — exactly the cadence of the serving engine's tick loop
+        (dispatch tick i, then finalize ticks ≤ i-1, whose observations
+        land before dispatch i+1), so an exclusive trajectory and a serve
+        run walk the same pool-bucket ladder. Controllers reset at entry:
+        a cached engine behaves like a fresh one. Frames/stats convert
+        after all dispatches, so pooling adds no *extra* syncs beyond the
+        pipelined count readbacks (none at all when pooling is off).
         """
         plan = schedule.WarpSchedule(self.window, "offtraj").windows(poses)
         hw = self.cam.height * self.cam.width
         frames_out: List[Optional[jnp.ndarray]] = [None] * len(poses)
         stats = RenderStats()
         results = []
+        self.pool_ctl.reset()
+        self.pool_ctl_coarse.reset()
+        pending_obs: List[WindowResult] = []
         for win in plan:
+            if self.pool_holes and len(pending_obs) >= 2:
+                self._observe_window(pending_obs.pop(0))
             tgt = jnp.stack([poses[i] for i in win["frames"]])
-            results.append((win["frames"], self.render_window(win["ref_pose"], tgt)))
+            res = self.render_window(win["ref_pose"], tgt)
+            results.append((win["frames"], res))
+            pending_obs.append(res)
             stats.reference_renders += 1
         for idxs, res in results:  # host conversion after all dispatches
             counts = np.asarray(res.hole_counts)

@@ -90,6 +90,33 @@ def pack_hole_rays(cam: rays.Camera, tgt_poses: jnp.ndarray,
     return FlatRays(osel, dsel, seg), addr
 
 
+def pack_hole_rays_pooled(cam: rays.Camera, tgt_poses: jnp.ndarray,
+                          addr: jnp.ndarray) -> Tuple[FlatRays, jnp.ndarray]:
+    """The tick's POOLED hole samples as one ``[S * bucket]`` flat batch.
+
+    ``addr`` is the ``[S, bucket]`` frame-local sample addresses
+    (``n*HW + pixel``) from
+    :func:`repro.core.sparw.compact_holes_pooled` — session ``s`` owns the
+    contiguous region ``[s*bucket, (s+1)*bucket)`` of the flat batch, so
+    segment ids stay session-major and (under session sharding) no gather
+    or scatter crosses a device boundary. Returns (flat rays, the flat
+    *global* pixel addresses ``s*N*HW + local`` used to segment-scatter
+    rendered colors back into frames). Rows past a session's true hole
+    total alias its frame 0 / pixel 0 and are masked at scatter time.
+    """
+    s, bucket = addr.shape
+    n = tgt_poses.shape[1]
+    hw = cam.height * cam.width
+    o_all, d_all = rays.generate_rays_batch(
+        cam, tgt_poses.reshape(s * n, 4, 4))  # [S*N, HW, 3]
+    flat_addr = (jnp.arange(s, dtype=jnp.int32)[:, None] * (n * hw)
+                 + addr).reshape(-1)  # [S*bucket] global sample address
+    osel = o_all.reshape(-1, 3)[flat_addr]
+    dsel = d_all.reshape(-1, 3)[flat_addr]
+    seg = jnp.repeat(jnp.arange(s, dtype=jnp.int32), bucket)
+    return FlatRays(osel, dsel, seg), flat_addr
+
+
 def scatter_segments(values: jnp.ndarray, addr: jnp.ndarray,
                      valid: jnp.ndarray, size: int) -> jnp.ndarray:
     """Segment-scatter flat results back to frame pixels: ONE scatter.

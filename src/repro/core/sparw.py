@@ -256,5 +256,72 @@ def compact_holes_flat(holes: jnp.ndarray, cap: int
     return idx.reshape(s, n, cap), hf.sum(axis=1).reshape(s, n)
 
 
+def compact_holes_pooled(holes: jnp.ndarray, bucket: int,
+                         live: Optional[jnp.ndarray] = None
+                         ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Compact a whole session window's holes into ONE pooled region.
+
+    ``holes`` is ``[S, N, HW]`` bool. Where :func:`compact_holes_flat`
+    reserves worst-case ``cap`` rows per *frame* (``S*N*cap`` total), the
+    pooled compaction reserves one ``[bucket]`` region per *session*: all
+    of a session's live frames compact contiguously, in (frame-major,
+    raster) order, into rows ``[s*bucket, (s+1)*bucket)`` of the tick's
+    flat hole batch. Returns (``addr [S, bucket]`` frame-local sample
+    addresses ``n*HW + pixel`` in emission order, ``totals [S]`` true
+    live-window hole totals). Rows past a session's total alias address 0
+    (frame 0, pixel 0) and are masked at scatter time, exactly like the
+    per-frame compaction's dump-slot discipline.
+
+    ``live`` ``[S, N]`` masks padded frames (ragged windows) out of the
+    pool — they must not consume capacity or shift their session's sample
+    addresses relative to an exclusive run without pads. Whenever
+    ``bucket >= totals[s]``, session ``s``'s address list is exactly the
+    concatenation of the per-frame :func:`compact_holes_flat` lists
+    (offset by ``n*HW``) — property-tested in ``tests/test_raybatch.py``.
+    """
+    s, n, hw = holes.shape
+    if live is not None:
+        holes = holes & live[:, :, None]
+    hf = holes.reshape(s, n * hw)
+    pos = jnp.cumsum(hf, axis=1) - 1  # rank among the session's holes
+    slot = jnp.where(hf & (pos < bucket), pos, bucket)  # [S, N*HW]
+    seg_off = jnp.arange(s, dtype=jnp.int32)[:, None] * (bucket + 1)
+    local = jnp.broadcast_to(jnp.arange(n * hw, dtype=jnp.int32), (s, n * hw))
+    addr = jnp.zeros((s * (bucket + 1),), jnp.int32).at[
+        (seg_off + slot).reshape(-1)].set(local.reshape(-1), mode="drop")
+    addr = addr.reshape(s, bucket + 1)[:, :bucket]  # drop the dump slot
+    return addr, hf.sum(axis=1)
+
+
+def warp_disagreement(rgb: jnp.ndarray, holes: jnp.ndarray
+                      ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Warped-neighborhood radiance disagreement (ASDR's sampling signal).
+
+    ``rgb`` ``[..., H, W, 3]`` warped colors, ``holes`` ``[..., H, W]``.
+    For every pixel, computes the variance of the *warped* (non-hole)
+    colors in its 3x3 neighborhood, averaged over channels, plus the count
+    of warped neighbors. A hole surrounded by many low-variance warped
+    pixels sits on radiance the warp already agrees about — a coarse
+    sample budget suffices; few neighbors or high variance mark
+    disocclusion edges that keep the full budget.
+    """
+    h, w = holes.shape[-2:]
+    wgt = (~holes).astype(rgb.dtype)[..., None]  # [..., H, W, 1]
+
+    def box3(a):  # 3x3 neighborhood sum with zero padding over H, W
+        pad = [(0, 0)] * (a.ndim - 3) + [(1, 1), (1, 1), (0, 0)]
+        p = jnp.pad(a, pad)
+        return sum(p[..., i:i + h, j:j + w, :]
+                   for i in range(3) for j in range(3))
+
+    cnt = box3(wgt)                      # [..., H, W, 1]
+    s1 = box3(rgb * wgt)
+    s2 = box3(rgb * rgb * wgt)
+    denom = jnp.maximum(cnt, 1.0)
+    mean = s1 / denom
+    var = jnp.maximum(s2 / denom - mean * mean, 0.0).mean(axis=-1)
+    return var, cnt[..., 0].astype(jnp.int32)
+
+
 def hole_fraction(holes: jnp.ndarray) -> jnp.ndarray:
     return holes.mean()

@@ -19,7 +19,6 @@ view-dependent radiance) and is used for warp-threshold experiments.
 """
 from __future__ import annotations
 
-import warnings
 from dataclasses import dataclass, field
 from typing import Optional, Tuple
 
@@ -96,7 +95,7 @@ class NerfModel:
         self.cfg = cfg
         self.scene = scene
         self._render_rays_jit: Optional[callable] = None
-        self._render_rays_batch_jit: Optional[callable] = None
+        self._render_rays_flat_jit: Optional[callable] = None
         # (feature table, its prebuilt MVoxel halo table) — the key is held
         # so an `is` hit can never alias a recycled object
         self._mv_table_cache: Optional[tuple] = None
@@ -204,41 +203,48 @@ class NerfModel:
     # ------------------------------------------------------------------
     def render_rays(self, params: dict, origins: jnp.ndarray, dirs: jnp.ndarray,
                     key: Optional[jax.Array] = None,
-                    seg: Optional[jnp.ndarray] = None, num_seg: int = 1
+                    seg: Optional[jnp.ndarray] = None, num_seg: int = 1,
+                    num_samples: Optional[int] = None
                     ) -> Tuple[jnp.ndarray, jnp.ndarray]:
         """Pixel-centric rendering. Returns (color [R,3], depth [R]).
 
         ``seg`` ([R] int32) + static ``num_seg`` tag each ray with its
         owning session for the flat ray-batch core — per-ray math is
         segment-oblivious, only the streaming gather's RIT bucketing uses
-        them (see :meth:`query_features`).
+        them (see :meth:`query_features`). Static ``num_samples``
+        overrides the config's per-ray sample budget — the adaptive
+        (ASDR-style) coarse sub-pool renders low-disagreement hole rays
+        at ``num_samples // coarse_factor``.
         """
         c = self.cfg
+        ns = int(num_samples) if num_samples is not None else c.num_samples
         pts, t_vals = rays.sample_along_rays(origins, dirs, c.near, c.far,
-                                             c.num_samples, key)
+                                             ns, key)
         flat_pts = pts.reshape(-1, 3)
-        flat_dirs = jnp.repeat(dirs, c.num_samples, axis=0)
-        sample_seg = (jnp.repeat(seg, c.num_samples)
+        flat_dirs = jnp.repeat(dirs, ns, axis=0)
+        sample_seg = (jnp.repeat(seg, ns)
                       if seg is not None else None)
         sigma, rgb = self.query_field(params, flat_pts, flat_dirs,
                                       seg=sample_seg, num_seg=num_seg)
-        sigma = sigma.reshape(-1, c.num_samples)
-        rgb = rgb.reshape(-1, c.num_samples, 3)
+        sigma = sigma.reshape(-1, ns)
+        rgb = rgb.reshape(-1, ns, 3)
         color, depth, _ = volrend.composite(sigma, rgb, t_vals, c.far, c.white_bkgd)
         return color, depth
 
     def render_rays_flat(self, params: dict, origins: jnp.ndarray,
                          dirs: jnp.ndarray,
-                         seg: Optional[jnp.ndarray] = None, num_seg: int = 1
+                         seg: Optional[jnp.ndarray] = None, num_seg: int = 1,
+                         num_samples: Optional[int] = None
                          ) -> Tuple[jnp.ndarray, jnp.ndarray]:
         """Flat ray-batch rendering: rays from any number of sessions run
-        as ONE fused call (this replaces the vmapped
-        :meth:`render_rays_batch` internals — the Pallas kernels see one
-        large contiguous batch instead of S small per-session programs).
-        Per-ray outputs are independent of how rays are batched, so each
-        session's rows match its exclusive render bit-for-bit."""
+        as ONE fused call (this replaced the vmapped ``render_rays_batch``
+        internals — the Pallas kernels see one large contiguous batch
+        instead of S small per-session programs). Per-ray outputs are
+        independent of how rays are batched, so each session's rows match
+        its exclusive render bit-for-bit."""
         return self.render_rays(params, origins.reshape(-1, 3),
-                                dirs.reshape(-1, 3), seg=seg, num_seg=num_seg)
+                                dirs.reshape(-1, 3), seg=seg, num_seg=num_seg,
+                                num_samples=num_samples)
 
     @property
     def render_rays_jit(self):
@@ -248,38 +254,17 @@ class NerfModel:
             self._render_rays_jit = jax.jit(self.render_rays)
         return self._render_rays_jit
 
-    def render_rays_batch(self, params: dict, origins: jnp.ndarray,
-                          dirs: jnp.ndarray
-                          ) -> Tuple[jnp.ndarray, jnp.ndarray]:
-        """Deprecated session-vmapped entry: [S,R,3] -> ([S,R,3], [S,R]).
-
-        Now a shim over :meth:`render_rays_flat` — the flat core renders
-        the same rays as ONE fused batch. Per-ray math is batch-oblivious
-        and the streaming gather keeps per-session RIT capacity via the
-        segment axis, so each session's rows match its unbatched render
-        (parity-tested; the engine-level bit-parity guarantees live in
-        :class:`repro.core.engine.DeviceSparwEngine`, whose flat stages
-        chunk at a fixed per-session quantum)."""
-        warnings.warn(
-            "NerfModel.render_rays_batch is deprecated; use "
-            "render_rays_flat (the flat ray-batch core) instead",
-            DeprecationWarning, stacklevel=2)
-        return self._render_rays_batch_impl(params, origins, dirs)
-
-    def _render_rays_batch_impl(self, params: dict, origins: jnp.ndarray,
-                                dirs: jnp.ndarray
-                                ) -> Tuple[jnp.ndarray, jnp.ndarray]:
-        s, r = origins.shape[0], origins.shape[1]
-        seg = jnp.repeat(jnp.arange(s, dtype=jnp.int32), r)
-        col, dep = self.render_rays_flat(params, origins, dirs,
-                                         seg=seg, num_seg=s)
-        return col.reshape(s, r, 3), dep.reshape(s, r)
-
     @property
-    def render_rays_batch_jit(self):
-        if self._render_rays_batch_jit is None:
-            self._render_rays_batch_jit = jax.jit(self._render_rays_batch_impl)
-        return self._render_rays_batch_jit
+    def render_rays_flat_jit(self):
+        """Jitted :meth:`render_rays_flat` (the flat ray-batch core's fused
+        entry), created once per model so XLA's compile cache is shared by
+        every caller. ``num_seg``/``num_samples`` are static (they set
+        batch shapes); re-traces only per distinct value."""
+        if self._render_rays_flat_jit is None:
+            self._render_rays_flat_jit = jax.jit(
+                self.render_rays_flat,
+                static_argnames=("num_seg", "num_samples"))
+        return self._render_rays_flat_jit
 
     def render_image(self, params: dict, cam: rays.Camera, c2w: jnp.ndarray,
                      chunk: int = 1 << 14) -> Tuple[jnp.ndarray, jnp.ndarray]:
@@ -301,15 +286,20 @@ class NerfModel:
                            ) -> Tuple[jnp.ndarray, jnp.ndarray]:
         """Full-frame renders for a pose batch [S,4,4] ->
         ([S,H,W,3], [S,H,W]), chunked over rays with the session axis kept
-        on-device (one dispatch per chunk regardless of S)."""
+        on-device — every chunk is ONE fused flat call over all S sessions'
+        rays (session-major, segment-tagged) via
+        :attr:`render_rays_flat_jit`."""
         o, d = rays.generate_rays_batch(cam, c2ws)  # [S,HW,3]
         s, n = o.shape[0], o.shape[1]
-        render = self.render_rays_batch_jit
+        render = self.render_rays_flat_jit
         colors, depths = [], []
         for i in range(0, n, chunk):
-            col, dep = render(params, o[:, i:i + chunk], d[:, i:i + chunk])
-            colors.append(col)
-            depths.append(dep)
+            width = o[:, i:i + chunk].shape[1]
+            seg = jnp.repeat(jnp.arange(s, dtype=jnp.int32), width)
+            col, dep = render(params, o[:, i:i + chunk], d[:, i:i + chunk],
+                              seg=seg, num_seg=s)
+            colors.append(col.reshape(s, width, 3))
+            depths.append(dep.reshape(s, width))
         color = jnp.concatenate(colors, axis=1).reshape(
             s, cam.height, cam.width, 3)
         depth = jnp.concatenate(depths, axis=1).reshape(

@@ -59,6 +59,7 @@ import numpy as np
 from repro.core import schedule
 from repro.core.config import (
     _UNSET,
+    HoleCapController,
     RenderConfig,
     RenderRequest,
     RenderStats,
@@ -87,6 +88,7 @@ class RenderSession:
     done: bool = False
     window: Optional[int] = None      # per-session warp window override
     hole_cap: Optional[int] = None    # per-session sparse-capacity override
+    pool_bucket: Optional[int] = None  # fixed pool-bucket override (pow2)
     priority: int = 0
     deadline_ms: Optional[float] = None
     arrival: int = -1                 # submission order (policy tie-break)
@@ -102,7 +104,9 @@ class RenderSession:
         """Build the engine-side session for a declarative request."""
         return cls(sid=request.sid if request.sid is not None else sid,
                    poses=list(request.poses), window=request.window,
-                   hole_cap=request.hole_cap, priority=request.priority,
+                   hole_cap=request.hole_cap,
+                   pool_bucket=request.pool_bucket,
+                   priority=request.priority,
                    deadline_ms=request.deadline_ms)
 
 
@@ -115,6 +119,10 @@ class _Slot:
     cap: int                          # effective hole capacity
     cursor: int = 0  # next un-rendered pose index
     extrapolator: Optional[schedule.RefPoseExtrapolator] = None
+    # per-session pool-bucket controllers (fresh at admit — a session's
+    # bucket ladder walks exactly like its exclusive run's)
+    ctl: Optional[HoleCapController] = None
+    ctl_c: Optional[HoleCapController] = None
 
 
 class RenderServeEngine:
@@ -172,13 +180,23 @@ class RenderServeEngine:
         # per-slot (window, cap) signature + its staged device arrays; the
         # arrays are rebuilt (one host→device transfer) only when admission
         # or draining changes the signature — never on a steady-state tick
-        self._slot_sig: Optional[Tuple[Tuple[int, int], ...]] = None
+        self._slot_sig: Optional[Tuple[Tuple[int, int, int, int], ...]] = None
         self._win_lens: Optional[jnp.ndarray] = None
         self._caps: Optional[jnp.ndarray] = None
-        # deferred host readback: (assignments, device result) per tick,
-        # where assignments[s] = (session, [frame indices]) or None
+        # per-session effective pool capacities + the tick's shared static
+        # buckets (max over slots — a session still overflows at its OWN
+        # controller's budget, carried by the traced pool-cap arrays)
+        self._pool_caps: Optional[jnp.ndarray] = None
+        self._pool_caps_c: Optional[jnp.ndarray] = None
+        self._tick_bucket = 0
+        self._tick_bucket_c = 0
+        # deferred host readback: (assignments, device result, buckets) per
+        # tick, where assignments[s] = (session, [frame indices], ctl,
+        # ctl_c) or None
         self._pending: List[tuple] = []
         self._last_result: Optional[BatchedWindowResult] = None
+        # per finalized tick: pool bucket/occupancy telemetry for metrics
+        self._pool_log: List[dict] = []
 
     # ------------------------------------------------------------------
     def _effective(self, sess: RenderSession) -> Tuple[int, int]:
@@ -195,6 +213,16 @@ class RenderServeEngine:
                 f"session {sess.sid}: hole_cap override {cap} outside "
                 f"[1, {self.engine.hole_cap}] (the engine's static "
                 f"compaction capacity)")
+        if sess.pool_bucket is not None:
+            if not self.engine.pool_holes:
+                raise ValueError(
+                    f"session {sess.sid}: pool_bucket override set but "
+                    f"the engine has pool_holes disabled")
+            if sess.pool_bucket > self.engine.pool_ctl.max_bucket:
+                raise ValueError(
+                    f"session {sess.sid}: pool_bucket override "
+                    f"{sess.pool_bucket} exceeds the engine's worst-case "
+                    f"bucket {self.engine.pool_ctl.max_bucket}")
         return win, cap
 
     def submit(self, sessions: List[RenderSession]) -> None:
@@ -213,21 +241,49 @@ class RenderServeEngine:
             if self.slots[s] is None and self.queue:
                 sess = self.queue.pop(self.policy.select(self.queue, now))
                 win, cap = self._effective(sess)
+                cfg = self.engine.config
+                ctl_kw = dict(worst=win * cap,
+                              min_bucket=self.engine.pool_min_bucket,
+                              safety=cfg.pool_safety,
+                              alpha=cfg.pool_ewma_alpha,
+                              fixed=(sess.pool_bucket
+                                     if sess.pool_bucket is not None
+                                     else cfg.pool_bucket))
                 self.slots[s] = _Slot(
                     session=sess, window=win, cap=cap,
-                    extrapolator=schedule.RefPoseExtrapolator(window=win))
+                    extrapolator=schedule.RefPoseExtrapolator(window=win),
+                    ctl=HoleCapController(**ctl_kw),
+                    ctl_c=HoleCapController(**ctl_kw))
 
     def _stage_slot_masks(self) -> None:
-        """Refresh the staged per-slot win_lens/caps device arrays iff the
-        slot composition changed (idle slots take the engine defaults —
-        their self-warp has zero holes, so any cap is unreachable)."""
-        sig = tuple((slot.window, slot.cap) if slot is not None
-                    else (self.window, self.engine.hole_cap)
-                    for slot in self.slots)
+        """Refresh the staged per-slot win_lens/caps/pool-caps device
+        arrays iff the slot signature changed — composition (admit/drain)
+        or a pool-controller ladder step (idle slots take the engine
+        defaults and the minimum pool bucket: their self-warp has zero
+        holes, so any capacity is unreachable and they never inflate the
+        tick's shared bucket)."""
+        engine = self.engine
+        adaptive = engine.adaptive_sampling
+        sig = []
+        for slot in self.slots:
+            if slot is None:
+                bf = engine.pool_min_bucket if engine.pool_holes else 0
+                sig.append((self.window, engine.hole_cap, bf,
+                            bf if adaptive else 0))
+            elif not engine.pool_holes:
+                sig.append((slot.window, slot.cap, 0, 0))
+            else:
+                sig.append((slot.window, slot.cap, slot.ctl.bucket,
+                            slot.ctl_c.bucket if adaptive else 0))
+        sig = tuple(sig)
         if sig != self._slot_sig:
             self._slot_sig = sig
-            self._win_lens = jnp.asarray([w for w, _ in sig], jnp.int32)
-            self._caps = jnp.asarray([c for _, c in sig], jnp.int32)
+            self._win_lens = jnp.asarray([e[0] for e in sig], jnp.int32)
+            self._caps = jnp.asarray([e[1] for e in sig], jnp.int32)
+            self._pool_caps = jnp.asarray([e[2] for e in sig], jnp.int32)
+            self._pool_caps_c = jnp.asarray([e[3] for e in sig], jnp.int32)
+            self._tick_bucket = max(e[2] for e in sig)
+            self._tick_bucket_c = max(e[3] for e in sig)
 
     def step(self) -> bool:
         """One engine tick: admit queued sessions into free slots (policy
@@ -258,7 +314,7 @@ class RenderServeEngine:
             # width — padded frames are rendered and discarded on the host,
             # and the win_lens mask keeps them out of the overflow decision
             tgt_poses.append(win + [win[-1]] * (self.window - len(win)))
-            assignments.append((sess, idxs))
+            assignments.append((sess, idxs, slot.ctl, slot.ctl_c))
             sess.stats.reference_renders += 1
             slot.cursor += len(idxs)
             if slot.cursor >= len(sess.poses):
@@ -267,8 +323,11 @@ class RenderServeEngine:
         result = self.engine.render_windows(
             jnp.stack(ref_poses),
             jnp.stack([jnp.stack(t) for t in tgt_poses]),
-            self._win_lens, self._caps)
-        self._pending.append((assignments, result))
+            self._win_lens, self._caps,
+            pool_caps=self._pool_caps, pool_caps_coarse=self._pool_caps_c,
+            bucket=self._tick_bucket, bucket_coarse=self._tick_bucket_c)
+        self._pending.append(
+            (assignments, result, (self._tick_bucket, self._tick_bucket_c)))
         self._last_result = result
         self.num_ticks += 1
         return True
@@ -280,21 +339,42 @@ class RenderServeEngine:
         leaves that many of the *newest* ticks pending — :meth:`run` uses
         it to drain completed ticks while one tick is still in flight."""
         hw = self.engine.cam.height * self.engine.cam.width
+        pool = self.engine.pool_holes
+        adaptive = self.engine.adaptive_sampling
         split = max(len(self._pending) - keep, 0)
         done, self._pending = self._pending[:split], self._pending[split:]
-        for assignments, res in done:
+        for assignments, res, (bf, bc) in done:
             counts = np.asarray(res.hole_counts)
+            fine = np.asarray(res.fine_counts)
             overflowed = np.asarray(res.overflowed)
+            tick_holes = tick_fine = active = 0
             for s, assign in enumerate(assignments):
                 if assign is None:
                     continue
-                sess, idxs = assign
+                sess, idxs, ctl, ctl_c = assign
                 ovf = bool(overflowed[s])
                 for j, f in enumerate(idxs):
                     sess.frames[f] = res.frames[s, j]
                     sess.stats.record_frame(int(counts[s, j]), ovf, hw)
                 if sess.frames.count(None) == 0:
                     sess.done = True
+                win_total = int(counts[s, :len(idxs)].sum())
+                fine_total = int(fine[s, :len(idxs)].sum())
+                tick_holes += win_total
+                tick_fine += fine_total
+                active += 1
+                # feed the session's pool controllers — the readback runs a
+                # tick behind dispatch, so observations land two dispatches
+                # after the window they describe (the cadence the exclusive
+                # engine's render_trajectory mirrors)
+                if pool and ctl is not None:
+                    ctl.observe(fine_total)
+                    if adaptive:
+                        ctl_c.observe(win_total - fine_total)
+            if pool:
+                self._pool_log.append(dict(
+                    bucket=bf, bucket_coarse=bc, hole_total=tick_holes,
+                    fine_total=tick_fine, active_slots=active))
 
     def _observe_tick(self, tick_t0: float, assignments: List[tuple],
                       result: BatchedWindowResult) -> None:
@@ -305,7 +385,7 @@ class RenderServeEngine:
         tick_s = time.time() - tick_t0
         for assign in assignments:
             if assign is not None:
-                sess, idxs = assign
+                sess, idxs = assign[0], assign[1]
                 sess.frame_latencies_s.extend([tick_s / len(idxs)] * len(idxs))
 
     def run(self, sessions: List[RenderSession], max_ticks: int = 10_000
@@ -325,6 +405,7 @@ class RenderServeEngine:
         """
         self.submit(sessions)
         start_ticks = self.num_ticks  # the engine may be reused across runs
+        log_start = len(self._pool_log)
         t0 = time.time()
         in_flight = None  # (dispatch_t0, assignments, device result)
         while self.num_ticks - start_ticks < max_ticks:
@@ -351,6 +432,38 @@ class RenderServeEngine:
                 "hole_fraction": s.stats.mean_hole_fraction,
             } for s in sessions
         }
+        # pooled-capacity telemetry: sparse NeRF samples actually reserved
+        # per tick vs the worst-case fixed-cap batch, pool occupancy, and
+        # the recompile budget actually spent walking the bucket ladder
+        engine = self.engine
+        ns = engine.model.cfg.num_samples
+        fixed_spt = self.num_slots * self.window * engine.hole_cap * ns
+        entries = self._pool_log[log_start:]
+        if engine.pool_holes and entries:
+            def _spt(e):
+                return self.num_slots * (
+                    e["bucket"] * ns
+                    + e["bucket_coarse"] * (ns // engine.coarse_factor))
+            samples_last = _spt(entries[-1])  # steady-state (post-warm-up)
+            samples_mean = float(np.mean([_spt(e) for e in entries]))
+            pool_slots = sum(
+                self.num_slots * (e["bucket"] + e["bucket_coarse"])
+                for e in entries)
+            util = float(sum(e["hole_total"] for e in entries)
+                         / max(pool_slots, 1))
+        else:
+            samples_last, samples_mean, util = fixed_spt, float(fixed_spt), float("nan")
+        pool_metrics = {
+            "enabled": engine.pool_holes,
+            "adaptive_sampling": engine.adaptive_sampling,
+            "samples_per_tick": samples_last,
+            "samples_per_tick_mean": samples_mean,
+            "samples_per_tick_fixed_cap": fixed_spt,
+            "work_reduction_vs_fixed_cap": fixed_spt / max(samples_last, 1),
+            "utilization": util,
+            "recompiles": len(engine.pool_buckets_used),
+            "ladder_size": engine.pool_ladder_size,
+        }
         return {
             "ticks": self.num_ticks - start_ticks,
             "wall_s": wall_s,
@@ -359,6 +472,7 @@ class RenderServeEngine:
             "per_session": per_session,
             "complete": all(s.done for s in sessions),
             "policy": self.policy.name,
+            "pool": pool_metrics,
             # session-sharding layout (1 = unsharded/single device)
             "devices": (self.engine.mesh.devices.size
                         if self.engine.mesh is not None else 1),

@@ -131,7 +131,7 @@ def test_priority_policy_admits_high_priority_late_request(renderer):
         while eng.step():
             pass
         order = []
-        for assignments, _ in eng._pending:
+        for assignments, *_ in eng._pending:
             for a in assignments:
                 if a is not None and a[0].sid not in order:
                     order.append(a[0].sid)
@@ -235,8 +235,11 @@ def test_per_session_hole_cap_override_isolated(small_model):
     reqs = [RenderRequest(poses=tuple(traj_a), hole_cap=tight),
             RenderRequest(poses=tuple(traj_b))]
     results, _ = r.serve(reqs, num_slots=2)
-    # A fell back to dense at least once (stats count full frames)
-    assert results[0].stats.sparse_pixels > sum(
+    # A fell back to dense at least once (fallback_pixels counts the
+    # NON-hole pixels the dense re-render redid; sparse_pixels stays the
+    # true hole work)
+    assert results[0].stats.fallback_pixels > 0
+    assert results[0].stats.sparse_pixels == sum(
         int(f * hw) for f in results[0].stats.hole_fractions)
     # ... bit-matching the exclusive engine at the same tight cap
     excl_a = r.render(RenderRequest(poses=tuple(traj_a), hole_cap=tight))
@@ -248,6 +251,7 @@ def test_per_session_hole_cap_override_isolated(small_model):
         np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
     assert results[1].stats.sparse_pixels == sum(
         int(f * hw) for f in results[1].stats.hole_fractions)
+    assert results[1].stats.fallback_pixels == 0
 
 
 def test_override_outside_engine_capacity_rejected(renderer):

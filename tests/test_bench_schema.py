@@ -19,9 +19,19 @@ MS_SEQ_KEYS = {"wall_s_cold", "wall_s_warm", "aggregate_fps_cold",
 MS_BATCH_KEYS = MS_SEQ_KEYS | {"ticks", "per_session_warm"}
 FLAT_KEYS = {"sessions", "flat_ref_rays_per_tick",
              "flat_hole_capacity_per_tick",
+             "flat_hole_capacity_per_tick_fixed_cap",
+             "pool_work_reduction_vs_fixed_cap", "pool_utilization",
+             "pool_recompiles", "pool_ladder_size", "samples_per_tick",
              "speedup_batched_vs_sequential",
              "speedup_batched_vs_sequential_warm", "warm_gate",
              "warm_gate_met", "parity_bit_identical", "config_fingerprint"}
+POOL_KEYS = {"enabled", "adaptive_sampling", "samples_per_tick",
+             "samples_per_tick_mean", "samples_per_tick_fixed_cap",
+             "work_reduction_vs_fixed_cap", "utilization", "recompiles",
+             "ladder_size"}
+ADAPTIVE_KEYS = {"samples_per_tick", "work_reduction_vs_fixed_cap",
+                 "max_abs_psnr_delta_vs_non_adaptive_db", "psnr_gate_db",
+                 "psnr_gate_met"}
 
 
 def _load():
@@ -63,6 +73,9 @@ def test_multi_session_schema_and_gates():
     for m in per_session.values():
         assert m["p50_latency_s"] > 0.0
         assert m["p95_latency_s"] >= m["p50_latency_s"]
+        # the paper's hole regime: every session's measured fraction is
+        # recorded and small (the pooled capacity's reason to exist)
+        assert 0.0 <= m["hole_fraction"] < 0.25
     # serving N clients through ONE batched engine beats N exclusive
     # engines end-to-end. The recorded baseline is 2.17×; the committed-file
     # gate is kept loose (>1.0) because the ratio is hardware wall-clock —
@@ -73,6 +86,35 @@ def test_multi_session_schema_and_gates():
     # quality parity gates are deterministic: keep them tight
     assert ms["parity"]["min_psnr_batched_vs_single_db"] >= 60.0
     assert ms["parity"]["max_abs_psnr_delta_vs_single_db"] <= 1e-3
+
+
+def test_pooled_capacity_schema_and_gates():
+    """Pooled tick-level hole capacity block: steady-state sparse work must
+    be fundamentally reduced (>= 4x fewer samples per tick than the
+    fixed-cap batch at the full config, >= 2x always), recompiles bounded
+    by the pow2 bucket ladder, and the adaptive-sampling sub-run inside the
+    paper's <1 dB PSNR budget."""
+    data = _load()
+    ms = data["multi_session"]
+    assert "pool" in ms, "multi_session block lost the pool baseline"
+    pool = ms["pool"]
+    assert POOL_KEYS <= set(pool)
+    assert pool["enabled"] is True
+    assert ms["samples_per_tick"] == pool["samples_per_tick"]
+    # work-reduction gates: 0.5x (always) and 4x (full-config acceptance)
+    fixed = pool["samples_per_tick_fixed_cap"]
+    assert pool["samples_per_tick"] <= 0.5 * fixed
+    if not data["config"]["smoke"]:
+        assert pool["work_reduction_vs_fixed_cap"] >= 4.0
+    assert 0.0 < pool["utilization"] <= 1.0
+    assert 1 <= pool["recompiles"] <= pool["ladder_size"]
+    # adaptive sampling: recorded, cheaper than the non-adaptive pool, and
+    # within the PSNR budget
+    ad = ms["adaptive"]
+    assert ADAPTIVE_KEYS <= set(ad)
+    assert ad["psnr_gate_db"] == 1.0
+    assert ad["psnr_gate_met"] is True
+    assert ad["max_abs_psnr_delta_vs_non_adaptive_db"] <= 1.0
 
 
 def test_flat_batch_schema_and_gates():
@@ -86,12 +128,17 @@ def test_flat_batch_schema_and_gates():
     fb = data["flat_batch"]
     assert FLAT_KEYS <= set(fb)
     assert fb["sessions"] >= 2
-    # flat geometry is consistent with the geometry the ticks ran with
-    hw = data["multi_session"]["res"] ** 2
+    # flat geometry is consistent with the geometry the ticks ran with:
+    # the fixed-cap worst case is recorded, and the POOLED capacity the
+    # ticks actually reserved comes in well under it
+    ms = data["multi_session"]
+    hw = ms["res"] ** 2
     assert fb["flat_ref_rays_per_tick"] == fb["sessions"] * hw
-    assert fb["flat_hole_capacity_per_tick"] == \
-        fb["sessions"] * data["multi_session"]["window"] * \
-        data["multi_session"]["hole_cap"]
+    fixed_cap = fb["sessions"] * ms["window"] * ms["hole_cap"]
+    assert fb["flat_hole_capacity_per_tick_fixed_cap"] == fixed_cap
+    assert fb["flat_hole_capacity_per_tick"] <= fixed_cap / 2
+    assert fb["pool_work_reduction_vs_fixed_cap"] >= 2.0
+    assert 1 <= fb["pool_recompiles"] <= fb["pool_ladder_size"]
     assert fb["warm_gate"] == 1.0
     assert fb["warm_gate_met"] is True
     assert fb["speedup_batched_vs_sequential_warm"] >= 1.0

@@ -46,3 +46,9 @@ def test_bench_multi_session_smoke():
     assert ms["parity"]["min_psnr_batched_vs_single_db"] >= 60.0
     assert ms["parity"]["max_abs_psnr_delta_vs_single_db"] <= 1e-3
     assert set(ms["batched"]["per_session_warm"]) == {"0", "1"}
+    # pooled-capacity telemetry rides along, already under the 0.5x
+    # work-reduction gate even at smoke scale
+    assert ms["pool"]["enabled"] is True
+    assert ms["samples_per_tick"] <= \
+        0.5 * ms["pool"]["samples_per_tick_fixed_cap"]
+    assert ms["adaptive"]["psnr_gate_met"] is True

@@ -76,8 +76,12 @@ def test_hole_capacity_overflow_falls_back_dense(baked_model, small_cam, traj):
     fd, sd = dev.render_trajectory(traj)
     for a, b in zip(fh, fd):
         assert float(psnr(a, b)) >= 60.0
-    # fallback renders every pixel of the window's frames
-    assert sd.sparse_pixels == sd.total_pixels
+    # sparse_pixels stays the true hole work; the dense fallback's extra
+    # (non-hole) pixels are charged to fallback_pixels — together they
+    # cover every pixel of the overflowed windows
+    assert sd.sparse_pixels == sh.sparse_pixels
+    assert sd.fallback_pixels > 0
+    assert sd.sparse_pixels + sd.fallback_pixels == sd.total_pixels
     # ... but the *measured* hole fractions are still the true ones
     np.testing.assert_allclose(sd.hole_fractions, sh.hole_fractions, atol=1e-9)
 

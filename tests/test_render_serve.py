@@ -42,8 +42,8 @@ def _single_session_frames(model, params, cam, traj, window, hole_cap=None):
 
 
 def test_model_batched_entry_points_match_per_session(small_model, cam):
-    """render_rays_batch / render_image_batch: the leading session axis is
-    exactly a vmap — each row matches the unbatched render of that pose."""
+    """render_rays_flat / render_image_batch: a fused session-major flat
+    batch — each session's rows match the unbatched render of that pose."""
     model, params = small_model
     c2ws = jnp.stack(pipeline.orbit_trajectory(3, step_deg=40.0))
     col_b, dep_b = model.render_image_batch(params, cam, c2ws, chunk=256)
@@ -54,8 +54,8 @@ def test_model_batched_entry_points_match_per_session(small_model, cam):
                                    atol=1e-5)
         np.testing.assert_allclose(np.asarray(dep_b[i]), np.asarray(dep),
                                    atol=1e-5)
-    # the jitted batch renderer is built once per model
-    assert model.render_rays_batch_jit is model.render_rays_batch_jit
+    # the jitted flat renderer is built once per model
+    assert model.render_rays_flat_jit is model.render_rays_flat_jit
 
 
 def test_streamed_schedule_state_matches_batch_plan():
@@ -142,10 +142,13 @@ def test_overflow_isolation_between_sessions(small_model, cam):
     sessions = [RenderSession(sid=0, poses=list(hot)),
                 RenderSession(sid=1, poses=list(quiet))]
     serve.run(sessions)
-    # hot session fell back to dense at least once
-    assert sessions[0].stats.sparse_pixels > sum(
+    # hot session fell back to dense at least once (the fallback's extra
+    # non-hole pixels land in fallback_pixels; sparse_pixels stays true)
+    assert sessions[0].stats.fallback_pixels > 0
+    assert sessions[0].stats.sparse_pixels == sum(
         int(f * hw) for f in sessions[0].stats.hole_fractions)
     # quiet session: sparse path only, stats record true hole counts
+    assert sessions[1].stats.fallback_pixels == 0
     assert sessions[1].stats.sparse_pixels == sum(
         int(f * hw) for f in sessions[1].stats.hole_fractions)
     # ... and bit-identical frames to its exclusive run at the same cap
@@ -189,8 +192,10 @@ def test_tick_has_zero_host_syncs(small_model, cam):
 def test_single_compile_for_engine_lifetime(small_model, cam):
     """Fixed slots + pose padding keep the batch shape static: ragged
     trajectories, idle slots AND mixed per-session window/hole_cap
-    overrides all reuse the same compiled program (win_lens/caps are
-    traced inputs — no per-tick or per-session retrace)."""
+    overrides all reuse compiled programs (win_lens/caps/pool_caps are
+    traced inputs — no per-tick or per-session retrace). With pooling the
+    only extra compiles are pool-bucket ladder steps: exactly one program
+    per distinct (bucket, bucket_coarse), bounded by the ladder size."""
     model, params = small_model
     trajs = [pipeline.orbit_trajectory(n, step_deg=1.0, phase_deg=10.0 * n)
              for n in (5, 3, 4)]  # ragged + an idle slot at the end
@@ -203,4 +208,53 @@ def test_single_compile_for_engine_lifetime(small_model, cam):
     serve.run(sessions)
     assert all(s.done for s in sessions)
     compiles = serve.engine._windows_jit._cache_size()
+    assert compiles == len(serve.engine.pool_buckets_used), \
+        f"compiles ({compiles}) must track distinct pool buckets " \
+        f"({serve.engine.pool_buckets_used})"
+    assert compiles <= serve.engine.pool_ladder_size
+
+
+def test_pool_disabled_is_single_compile(small_model, cam):
+    """pool_holes=False restores the PR 5 contract verbatim: one compiled
+    batch program for the whole engine lifetime."""
+    model, params = small_model
+    trajs = [pipeline.orbit_trajectory(n, step_deg=1.0, phase_deg=10.0 * n)
+             for n in (5, 3)]
+    serve = RenderServeEngine(
+        model, params,
+        config=_cfg(cam, num_slots=2, window=2, pool_holes=False))
+    sessions = [RenderSession(sid=i, poses=list(t))
+                for i, t in enumerate(trajs)]
+    serve.run(sessions)
+    assert all(s.done for s in sessions)
+    compiles = serve.engine._windows_jit._cache_size()
     assert compiles == 1, f"expected 1 compiled batch program, got {compiles}"
+
+
+def test_pool_resize_recompiles_bounded_by_ladder(small_model, cam):
+    """A long steady run walks the hole-cap controller down the pow2
+    ladder: the bucket actually shrinks (work reduction is real), every
+    resize compiles at most one new program, and the total compile count
+    stays <= the ladder size (satellite: recompile-count gate)."""
+    model, params = small_model
+    trajs = _trajs(2, 16)  # long enough for the EWMA to settle + resize
+    serve = RenderServeEngine(model, params,
+                              config=_cfg(cam, num_slots=2, window=2))
+    sessions = [RenderSession(sid=i, poses=list(t))
+                for i, t in enumerate(trajs)]
+    serve.run(sessions)
+    assert all(s.done for s in sessions)
+    buckets = sorted(b for b, _ in serve.engine.pool_buckets_used)
+    assert len(buckets) >= 2, "controller never resized the pool bucket"
+    assert buckets[0] < serve.engine.pool_ctl.max_bucket
+    compiles = serve.engine._windows_jit._cache_size()
+    assert compiles == len(serve.engine.pool_buckets_used)
+    assert compiles <= serve.engine.pool_ladder_size
+    # a fixed per-session pool_bucket override pins the ladder to one rung
+    pinned = RenderServeEngine(model, params,
+                               config=_cfg(cam, num_slots=2, window=2))
+    bmax = pinned.engine.pool_ctl.max_bucket
+    psessions = [RenderSession(sid=i, poses=list(t), pool_bucket=bmax)
+                 for i, t in enumerate(_trajs(2, 16))]
+    pinned.run(psessions)
+    assert pinned.engine.pool_buckets_used == {(bmax, 0)}
