@@ -85,4 +85,39 @@ if not ms["adaptive"]["psnr_gate_met"]:
              f"{ms['adaptive']['max_abs_psnr_delta_vs_non_adaptive_db']:.3f}"
              " dB > 1.0 dB")
 PY
+
+echo "== bytes-moved-per-frame gate (fused sweep count vs baseline) =="
+# The fused streaming tick exists to fetch each MVoxel halo block ONCE per
+# tick. Absolute bytes/frame depend on geometry (the smoke grid is far
+# smaller than the committed full-config baseline), so the >10% regression
+# gate runs on the geometry-invariant metric: table sweeps per tick. The
+# fused count is a compiled-schedule constant (1.0); any growth means the
+# pipeline regressed to multi-sweep streaming.
+python - <<'PY'
+import json, sys
+mem = json.load(open("/tmp/BENCH_render_ci.json")).get("memory")
+if mem is None:
+    sys.exit("FAIL: smoke bench lost the memory (bytes-moved) block")
+for k in ("staged", "fused", "bytes_moved_per_frame",
+          "bytes_reduction_staged_over_fused", "parity", "layout"):
+    if k not in mem:
+        sys.exit(f"FAIL: memory block lost key {k!r}")
+base = json.load(open("BENCH_render.json"))["memory"]
+sweeps = mem["fused"]["mvoxel_table_sweeps_per_tick"]
+base_sweeps = base["fused"]["mvoxel_table_sweeps_per_tick"]
+red = mem["bytes_reduction_staged_over_fused"]
+print(f"fused table sweeps/tick (smoke): {sweeps} (baseline {base_sweeps}); "
+      f"staged-over-fused byte reduction {red:.1f}x")
+if sweeps > 1.1 * base_sweeps:
+    sys.exit(f"FAIL: fused sweeps/tick {sweeps} regressed >10% over "
+             f"baseline {base_sweeps}")
+if red < 2.0:
+    sys.exit(f"FAIL: staged-over-fused byte reduction {red:.1f}x < 2x")
+if not mem["parity"]["layout_parity_bit_identical"]:
+    sys.exit("FAIL: bank-interleaved MVoxel layout lost bit parity")
+if not mem["parity"]["psnr_gate_met"]:
+    sys.exit("FAIL: fused-vs-staged PSNR "
+             f"{mem['parity']['min_psnr_fused_vs_staged_db']:.2f} dB "
+             "under gate")
+PY
 echo "CI OK"

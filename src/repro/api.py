@@ -143,6 +143,7 @@ def make_renderer(config: RenderConfig, *,
             channels=config.channels, decoder=config.decoder,
             num_samples=config.num_samples, backend=config.backend,
             stream_capacity=config.stream_capacity,
+            mvoxel_layout=config.mvoxel_layout,
             pallas_interpret=config.pallas_interpret)
         params = model.init_baked(scene)
     return Renderer(config, model, params)

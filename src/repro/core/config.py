@@ -265,6 +265,22 @@ class RenderConfig:
     adaptive_var_threshold: float = 0.0002  # neighborhood radiance variance
     coarse_factor: int = 4              # sample reduction for low-var holes
 
+    # --- unified streaming tick (fused reference→warp→hole-fill) ----------
+    # fused_tick=True routes rendering through the single-pass streaming
+    # pipeline (kernels/streaming_pipeline.py via raybatch.render_tick_
+    # streaming): the tick's pooled hole samples and the NEXT tick's
+    # reference samples share ONE MVoxel-table sweep, so each (segment,
+    # MVoxel) halo block is fetched once per tick instead of once per
+    # ray-chunk per stage. Requires backend="streaming".
+    fused_tick: bool = False
+    # On-chip layout of the staged MVoxel halo block (paper §on-chip data
+    # layout): "identity" keeps halo points in x-major order (the parity
+    # control); "bank_interleaved" permutes them so the 8 corners of every
+    # voxel land in 8 distinct SRAM banks (conflict-free concurrent
+    # access). The permutation is value-exact — outputs are bit-identical
+    # across layouts (gated).
+    mvoxel_layout: str = "identity"
+
     # --- model shape (what repro.api.make_renderer builds) ----------------
     model_kind: str = "dvgo"
     backend: str = "reference"  # reference | streaming (Pallas hot path)
@@ -313,6 +329,24 @@ class RenderConfig:
             raise ValueError(
                 f"adaptive_sampling needs num_samples ({self.num_samples}) "
                 f"divisible by coarse_factor ({self.coarse_factor})")
+        if self.mvoxel_layout not in ("identity", "bank_interleaved"):
+            raise ValueError(
+                f"mvoxel_layout must be identity|bank_interleaved, got "
+                f"{self.mvoxel_layout!r}")
+        if self.fused_tick and self.backend != "streaming":
+            raise ValueError(
+                "fused_tick=True requires backend='streaming' (the unified "
+                "tick is the MVoxel-streaming pipeline; the reference "
+                "backend has no MVoxel table to stream)")
+        if self.fused_tick and not self.pool_holes:
+            raise ValueError(
+                "fused_tick=True requires pool_holes=True (the fused tick "
+                "renders the pooled hole batch and the next reference in "
+                "one MVoxel sweep)")
+        if self.fused_tick and self.adaptive_sampling:
+            raise ValueError(
+                "fused_tick=True does not support adaptive_sampling: the "
+                "fused sweep carries one hole RIT, not a fine/coarse split")
         if self.shard is not None and self.shard.enabled \
                 and self.num_slots % self.shard.num_devices != 0:
             raise ValueError(

@@ -171,6 +171,17 @@ class DeviceSparwEngine:
         self.num_window_calls = 0  # jitted window invocations (tests assert)
         self._windows_jit = jax.jit(self._render_windows,
                                     static_argnums=(7, 8))
+        # --- unified streaming tick (fused ref→warp→hole-fill) ------------
+        # fused_tick routes render_trajectory through ONE dual-RIT MVoxel
+        # sweep per tick (raybatch.render_tick_streaming); the staged
+        # _windows_jit stays available (it is the bytes-moved baseline and
+        # the dense-fallback / serve path)
+        self.fused_tick = bool(getattr(config, "fused_tick", False))
+        if self.fused_tick and not self._seg_aware:
+            raise ValueError(
+                "fused_tick requires a dvgo model on the streaming backend")
+        self._tick_jit = jax.jit(self._tick_streaming, static_argnums=(9,))
+        self._prime_jit = jax.jit(self._prime_reference)
         # staged full-window/full-cap defaults per (S, N) so a default
         # render_windows call never rebuilds them (and the serving engine's
         # explicit arrays follow the same staging discipline)
@@ -498,6 +509,136 @@ class DeviceSparwEngine:
                                  win_lens, caps, pool_caps,
                                  pool_caps_coarse, bucket, bucket_coarse)
 
+    # ------------------------------------------------------------------
+    # unified streaming tick (fused reference → warp → hole-fill)
+    # ------------------------------------------------------------------
+    def _prime_reference(self, params: dict, ref_poses: jnp.ndarray
+                         ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+        """Render the pipeline-priming reference frames ([S,4,4] poses →
+        ([S,H,W,3], [S,H,W])) — the staged flat reference stage, run ONCE
+        per trajectory before the fused ticks take over (every later
+        reference comes out of a fused sweep)."""
+        s = ref_poses.shape[0]
+        h, w = self.cam.height, self.cam.width
+        ref = raybatch.pack_reference_rays(self.cam, ref_poses)
+        col, dep = self._render_rays_flat(params, ref.origins, ref.dirs,
+                                          ref.seg, s, quantum=h * w)
+        return col.reshape(s, h, w, 3), dep.reshape(s, h, w)
+
+    def prime_reference(self, ref_poses: jnp.ndarray
+                        ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+        return self._prime_jit(self.params, ref_poses)
+
+    def _tick_streaming(self, params: dict, rgb_ref: jnp.ndarray,
+                        dep_ref: jnp.ndarray, ref_poses: jnp.ndarray,
+                        tgt_poses: jnp.ndarray, next_ref_poses: jnp.ndarray,
+                        win_lens: jnp.ndarray, caps: jnp.ndarray,
+                        pool_caps: jnp.ndarray, bucket: int
+                        ) -> raybatch.StreamingTickResult:
+        return raybatch.render_tick_streaming(
+            self.model, params, self.cam, phi_deg=self.phi_deg,
+            rgb_ref=rgb_ref, dep_ref=dep_ref, ref_poses=ref_poses,
+            tgt_poses=tgt_poses, next_ref_poses=next_ref_poses,
+            win_lens=win_lens, caps=caps, pool_caps=pool_caps,
+            bucket=bucket,
+            dense_fill=lambda tp: self._dense_fill_flat(params, tp))
+
+    def render_windows_streaming(self, rgb_ref: jnp.ndarray,
+                                 dep_ref: jnp.ndarray,
+                                 ref_poses: jnp.ndarray,
+                                 tgt_poses: jnp.ndarray,
+                                 next_ref_poses: jnp.ndarray,
+                                 win_lens: Optional[jnp.ndarray] = None,
+                                 caps: Optional[jnp.ndarray] = None,
+                                 pool_caps: Optional[jnp.ndarray] = None,
+                                 bucket: Optional[int] = None
+                                 ) -> raybatch.StreamingTickResult:
+        """One unified streaming tick for S sessions: warp the references
+        rendered LAST tick (``rgb_ref``/``dep_ref`` @ ``ref_poses``) into
+        ``tgt_poses``, fill the pooled holes AND render
+        ``next_ref_poses``'s frames through one fused MVoxel sweep. The
+        returned ``next_rgb_ref``/``next_dep_ref`` feed the next call —
+        cross-tick software pipelining. Same staging/ladder discipline as
+        :meth:`render_windows`; re-traces only per (S, N, bucket)."""
+        s, n = tgt_poses.shape[0], tgt_poses.shape[1]
+        if win_lens is None or caps is None:
+            staged = self._staged_masks(s, n)
+            win_lens = staged[0] if win_lens is None else win_lens
+            caps = staged[1] if caps is None else caps
+        if bucket is None:
+            bucket = self._current_buckets()[0]
+        if pool_caps is None:
+            pool_caps = self._staged_pool_caps(s, bucket, 0)[0]
+        if bucket == 0:
+            raise ValueError("the fused streaming tick requires a pooled "
+                             "hole bucket (pool_holes=True)")
+        self.pool_buckets_used.add((bucket, 0))
+        self.num_window_calls += 1
+        return self._tick_jit(self.params, rgb_ref, dep_ref, ref_poses,
+                              tgt_poses, next_ref_poses, win_lens, caps,
+                              pool_caps, bucket)
+
+    # ------------------------------------------------------------------
+    # per-tick bytes-moved accounting (staged vs fused MVoxel traffic)
+    # ------------------------------------------------------------------
+    def _staged_chunk_sweeps(self, n_rays: int, quantum: int) -> int:
+        """How many ``lax.map`` chunks one staged flat stage runs — each
+        chunk is one full MVoxel-table sweep (its ``pallas_call`` grid
+        iterates every halo block). Mirrors ``_render_rays_flat``'s chunk
+        math exactly."""
+        if n_rays == 0:
+            return 0
+        c = min(self.ray_chunk, max(-(-quantum // 2), 1), n_rays)
+        return round_up(n_rays, c) // c
+
+    def tick_memory_stats(self, sessions: int, window: Optional[int] = None,
+                          bucket: Optional[int] = None) -> Dict[str, float]:
+        """Analytic per-tick MVoxel-table traffic: staged vs fused.
+
+        The staged tick re-streams the FULL halo table once per ray chunk
+        of every stage (reference + pooled fill); the fused tick streams
+        it exactly once. Counted from the same chunk math the compiled
+        programs use — deterministic, no profiling. The XLA-side
+        cross-check (total HLO bytes) lives in ``roofline.hlo_cost``;
+        this is the Pallas-side analytic count the ISSUE's
+        ``bytes_moved_per_frame`` gate runs on.
+        """
+        n = int(window) if window is not None else self.window
+        s = int(sessions)
+        hw = self.cam.height * self.cam.width
+        if bucket is None:
+            bucket = self._current_buckets()[0]
+        scfg = self.model.streaming_cfg
+        chans = self.model.cfg.feat_channels
+        block_bytes = scfg.halo_rows * chans * 4
+        table_bytes = scfg.num_mvoxels * block_bytes
+        ref_sweeps = self._staged_chunk_sweeps(s * hw, hw)
+        if bucket > 0:
+            fill_sweeps = self._staged_chunk_sweeps(s * bucket,
+                                                    self.pool_min_bucket)
+        else:
+            fill_sweeps = self._staged_chunk_sweeps(
+                s * n * self.hole_cap, n * self.hole_cap)
+        staged_sweeps = ref_sweeps + fill_sweeps
+        frames = s * n
+        return {
+            "sessions": float(s),
+            "window": float(n),
+            "pool_bucket": float(bucket),
+            "mvoxel_table_bytes": float(table_bytes),
+            "staged_table_sweeps_per_tick": float(staged_sweeps),
+            "staged_ref_sweeps": float(ref_sweeps),
+            "staged_fill_sweeps": float(fill_sweeps),
+            "staged_mvoxel_bytes_per_tick": float(staged_sweeps
+                                                  * table_bytes),
+            "staged_mvoxel_bytes_per_frame": staged_sweeps * table_bytes
+            / frames,
+            "fused_table_sweeps_per_tick": 1.0,
+            "fused_mvoxel_bytes_per_tick": float(table_bytes),
+            "fused_mvoxel_bytes_per_frame": table_bytes / frames,
+            "bytes_reduction_staged_over_fused": float(staged_sweeps),
+        }
+
     def _observe_window(self, res) -> None:
         """Feed one finished window's hole totals to the pool controllers
         (host-side, between dispatches — the compiled program never sees
@@ -524,6 +665,8 @@ class DeviceSparwEngine:
         after all dispatches, so pooling adds no *extra* syncs beyond the
         pipelined count readbacks (none at all when pooling is off).
         """
+        if self.fused_tick:
+            return self._render_trajectory_fused(poses)
         plan = schedule.WarpSchedule(self.window, "offtraj").windows(poses)
         hw = self.cam.height * self.cam.width
         frames_out: List[Optional[jnp.ndarray]] = [None] * len(poses)
@@ -545,5 +688,51 @@ class DeviceSparwEngine:
             ovf = bool(res.overflowed)
             for j, f in enumerate(idxs):
                 frames_out[f] = res.frames[j]
+                stats.record_frame(int(counts[j]), ovf, hw)
+        return [f for f in frames_out if f is not None], stats
+
+    def _render_trajectory_fused(self, poses: List[jnp.ndarray]
+                                 ) -> Tuple[List[jnp.ndarray], RenderStats]:
+        """Trajectory rendering through the unified streaming tick.
+
+        Same offtraj schedule, pool-controller cadence and host-conversion
+        discipline as the staged loop, but each window is ONE fused
+        MVoxel sweep: tick ``i`` warps the reference that tick ``i-1``'s
+        sweep rendered and co-renders tick ``i+1``'s reference
+        (cross-tick software pipelining; the first reference is primed by
+        the staged flat reference stage). The last tick re-renders its
+        own reference as the next-ref placeholder — one warm-schedule
+        sweep, output discarded.
+        """
+        plan = list(schedule.WarpSchedule(self.window, "offtraj")
+                    .windows(poses))
+        hw = self.cam.height * self.cam.width
+        frames_out: List[Optional[jnp.ndarray]] = [None] * len(poses)
+        stats = RenderStats()
+        results = []
+        self.pool_ctl.reset()
+        self.pool_ctl_coarse.reset()
+        pending_obs: List[raybatch.StreamingTickResult] = []
+        ref_pose = plan[0]["ref_pose"][None]
+        rgb_ref, dep_ref = self.prime_reference(ref_pose)
+        stats.reference_renders += 1  # the priming render
+        for i, win in enumerate(plan):
+            if self.pool_holes and len(pending_obs) >= 2:
+                self._observe_window(pending_obs.pop(0))
+            tgt = jnp.stack([poses[j] for j in win["frames"]])[None]
+            next_pose = (plan[i + 1]["ref_pose"][None]
+                         if i + 1 < len(plan) else ref_pose)
+            res = self.render_windows_streaming(rgb_ref, dep_ref, ref_pose,
+                                                tgt, next_pose)
+            rgb_ref, dep_ref = res.next_rgb_ref, res.next_dep_ref
+            ref_pose = next_pose
+            results.append((win["frames"], res))
+            pending_obs.append(res)
+            stats.reference_renders += 1
+        for idxs, res in results:  # host conversion after all dispatches
+            counts = np.asarray(res.hole_counts)[0]
+            ovf = bool(np.asarray(res.overflowed)[0])
+            for j, f in enumerate(idxs):
+                frames_out[f] = res.frames[0, j]
                 stats.record_frame(int(counts[j]), ovf, hw)
         return [f for f in frames_out if f is not None], stats

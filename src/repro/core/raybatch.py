@@ -132,6 +132,115 @@ def scatter_segments(values: jnp.ndarray, addr: jnp.ndarray,
 
 
 # ---------------------------------------------------------------------------
+# unified streaming tick (fused reference → warp → hole-fill)
+# ---------------------------------------------------------------------------
+
+
+class StreamingTickResult(NamedTuple):
+    """One fused tick's outputs plus the reference state it hands to the
+    next tick (cross-tick software pipelining: tick ``t`` warps the
+    reference that tick ``t-1``'s fused gather rendered, and renders tick
+    ``t+1``'s reference in the same MVoxel-table sweep)."""
+
+    frames: jnp.ndarray       # [S, N, H, W, 3]
+    hole_counts: jnp.ndarray  # [S, N] int32 — true (uncapped) hole counts
+    overflowed: jnp.ndarray   # [S] bool — per-session dense-fallback flag
+    fine_counts: jnp.ndarray  # [S, N] int32 (== hole_counts; no adaptive
+    #                           split on the fused path)
+    next_rgb_ref: jnp.ndarray  # [S, H, W, 3] — tick t+1's reference frames
+    next_dep_ref: jnp.ndarray  # [S, H, W]
+
+
+def render_tick_streaming(model, params: dict, cam: rays.Camera, *,
+                          phi_deg: Optional[float],
+                          rgb_ref: jnp.ndarray, dep_ref: jnp.ndarray,
+                          ref_poses: jnp.ndarray, tgt_poses: jnp.ndarray,
+                          next_ref_poses: jnp.ndarray,
+                          win_lens: jnp.ndarray, caps: jnp.ndarray,
+                          pool_caps: jnp.ndarray, bucket: int,
+                          dense_fill=None) -> StreamingTickResult:
+    """The unified streaming tick: warp → pooled compaction → ONE fused
+    Pallas gather serving BOTH the tick's hole fill and the NEXT tick's
+    reference render → decode → composite → segment-scatter.
+
+    Where the staged tick (``engine._render_windows``) runs reference
+    render and hole fill as separate chunked programs — each ``lax.map``
+    chunk re-streaming the full MVoxel table — this path bundles the
+    pooled hole samples with the next reference's samples into one
+    dual-RIT sweep (``kernels.streaming_pipeline.gather_features_tick``),
+    so every (segment, MVoxel) halo block is fetched exactly once per
+    tick. The reference consumed here (``rgb_ref``/``dep_ref``, posed at
+    ``ref_poses``) was produced by the *previous* tick (or by
+    ``DeviceSparwEngine.prime_reference`` at trajectory start).
+
+    ``bucket`` is the static pooled hole capacity (pow2 ladder);
+    ``win_lens``/``caps``/``pool_caps`` are the traced per-session masks,
+    identical in meaning to the staged path's. ``dense_fill`` is the
+    per-session overflow fallback, ``tgt_poses -> [S, N, HW, 3]``
+    (the engine passes its flat dense renderer).
+    Requires a pooled dvgo/streaming model (``RenderConfig.fused_tick``
+    validation enforces this).
+    """
+    from repro.core import sparw
+    from repro.kernels import streaming_pipeline
+    from repro.nerf import volrend
+
+    s, n = tgt_poses.shape[0], tgt_poses.shape[1]
+    h, w = cam.height, cam.width
+    hw = h * w
+    c = model.cfg
+    ns = c.num_samples
+    # ②③ warp LAST tick's reference into this tick's targets + pool holes
+    warped = sparw.warp_frames_flat(rgb_ref, dep_ref, ref_poses, tgt_poses,
+                                    cam, phi_deg=phi_deg)
+    holes = warped.holes.reshape(s, n, hw)
+    live = jnp.arange(n)[None, :] < win_lens[:, None]
+    counts = jnp.sum(holes & live[:, :, None], axis=2)
+    frame_over = jnp.max(jnp.where(live, counts, 0), axis=1) > caps
+    addr, totals = sparw.compact_holes_pooled(holes, bucket, live)
+    hole_batch, flat_addr = pack_hole_rays_pooled(cam, tgt_poses, addr)
+    ref_batch = pack_reference_rays(cam, next_ref_poses)
+    # ①④ fused: sample both ray sets, gather through ONE table sweep
+    pts_h, t_h = rays.sample_along_rays(hole_batch.origins, hole_batch.dirs,
+                                        c.near, c.far, ns, None)
+    pts_r, t_r = rays.sample_along_rays(ref_batch.origins, ref_batch.dirs,
+                                        c.near, c.far, ns, None)
+    feats_h, feats_r = streaming_pipeline.gather_features_tick(
+        params["table"], params["mv_table"], model.streaming_cfg,
+        pts_h.reshape(-1, 3), jnp.repeat(hole_batch.seg, ns),
+        pts_r.reshape(-1, 3), jnp.repeat(ref_batch.seg, ns),
+        num_seg=s, interpret=c.pallas_interpret)
+    sig_h, rgb_h = model.decode_features(
+        params, feats_h, jnp.repeat(hole_batch.dirs, ns, axis=0))
+    sig_r, rgb_r = model.decode_features(
+        params, feats_r, jnp.repeat(ref_batch.dirs, ns, axis=0))
+    fill_col, _, _ = volrend.composite(sig_h.reshape(-1, ns),
+                                       rgb_h.reshape(-1, ns, 3), t_h,
+                                       c.far, c.white_bkgd)
+    ref_col, ref_dep, _ = volrend.composite(sig_r.reshape(-1, ns),
+                                            rgb_r.reshape(-1, ns, 3), t_r,
+                                            c.far, c.white_bkgd)
+    # segment-scatter the sparse fill back to frames
+    valid = (jnp.arange(bucket)[None, :] < totals[:, None]).reshape(-1)
+    sparse = scatter_segments(fill_col, flat_addr, valid,
+                              s * n * hw).reshape(s, n, hw, 3)
+    overflowed = frame_over | (totals > pool_caps)
+    if dense_fill is not None:
+        dense = jax.lax.cond(jnp.any(overflowed),
+                             lambda _: dense_fill(tgt_poses),
+                             lambda _: jnp.zeros_like(sparse), None)
+        fill = jnp.where(overflowed[:, None, None, None], dense, sparse)
+    else:
+        fill = sparse
+    frames = jnp.where(holes[..., None], fill,
+                       warped.rgb.reshape(s, n, hw, 3))
+    return StreamingTickResult(
+        frames.reshape(s, n, h, w, 3), counts.astype(jnp.int32),
+        overflowed, counts.astype(jnp.int32),
+        ref_col.reshape(s, h, w, 3), ref_dep.reshape(s, h, w))
+
+
+# ---------------------------------------------------------------------------
 # session sharding (ShardConfig -> jax.sharding)
 # ---------------------------------------------------------------------------
 

@@ -31,6 +31,7 @@ per table, not once per frame.
 """
 from __future__ import annotations
 
+import functools as _functools
 from collections import OrderedDict
 from dataclasses import dataclass
 from typing import Dict, NamedTuple, Optional, Tuple
@@ -47,6 +48,13 @@ class StreamingCfg:
     grid_res: int = 64  # vertices per scene edge
     mvoxel_edge: int = 8  # vertices per MVoxel edge (paper: 8^3 points)
     capacity: int = 512  # RIT entry capacity (samples per MVoxel)
+    # on-chip layout of the staged halo block (paper §on-chip data layout):
+    # "identity" keeps halo points x-major; "bank_interleaved" places each
+    # point so the 8 corners of every voxel hit 8 distinct SRAM banks.
+    # The re-layout is a pure row permutation (plus zero pad rows), so
+    # gathered features are bit-identical across layouts.
+    layout: str = "identity"
+    num_banks: int = 8  # SRAM banks the interleave targets (paper: 8 reducers)
 
     @property
     def mv_per_edge(self) -> int:
@@ -59,6 +67,15 @@ class StreamingCfg:
     @property
     def halo_points(self) -> int:
         return (self.mvoxel_edge + 1) ** 3
+
+    @property
+    def halo_rows(self) -> int:
+        """Rows of the staged halo block under this layout (identity: the
+        halo point count; bank_interleaved: padded so every bank owns an
+        equal stride of rows)."""
+        if self.layout == "identity":
+            return self.halo_points
+        return layout_row_map(self)[1]
 
 
 def sample_base_coords(points: jnp.ndarray, res: int) -> jnp.ndarray:
@@ -95,9 +112,105 @@ def local_corner_ids(points: jnp.ndarray, cfg: StreamingCfg
     return ids, cw.prod(axis=-1)
 
 
+# ---------------------------------------------------------------------------
+# on-chip halo-block layout (paper §on-chip data layout: bank interleaving)
+# ---------------------------------------------------------------------------
+
+
+def halo_point_banks(cfg: StreamingCfg) -> np.ndarray:
+    """Target SRAM bank per halo point, [(edge+1)^3] int.
+
+    With ``num_banks = 8`` the bank of point ``(x, y, z)`` is
+    ``(4x + 2y + z) mod 8`` — the 8 corners of ANY voxel (offsets
+    ``(a, b, c)`` with a,b,c ∈ {0,1}) differ by ``4a + 2b + c``, which
+    takes all 8 residues, so every trilerp's concurrent corner reads hit
+    8 distinct banks (the paper's conflict-free reducer feed).
+    """
+    p = cfg.mvoxel_edge + 1
+    x, y, z = np.meshgrid(np.arange(p), np.arange(p), np.arange(p),
+                          indexing="ij")
+    return ((4 * x + 2 * y + z) % cfg.num_banks).reshape(-1)
+
+
+@_functools.lru_cache(maxsize=None)
+def layout_row_map(cfg: StreamingCfg) -> Tuple[np.ndarray, int]:
+    """(row_of_point [(edge+1)^3] int32, padded row count) for the
+    bank-interleaved layout.
+
+    Point ``p`` is stored at row ``rank_within_bank(p) * num_banks +
+    bank(p)`` — row index mod ``num_banks`` IS the bank, so the physical
+    row stream round-robins the banks and the 8 corners of every voxel
+    (8 distinct target banks) occupy 8 distinct banks by construction.
+    Banks own unequal point counts, so rows pad up to
+    ``num_banks * max_bank_count`` (pad rows are zero and never selected
+    — the gather is a one-hot matmul over remapped ids).
+    """
+    banks = halo_point_banks(cfg)
+    b = cfg.num_banks
+    rank = np.zeros_like(banks)
+    for bank in range(b):
+        sel = banks == bank
+        rank[sel] = np.arange(int(sel.sum()))
+    rows = (rank * b + banks).astype(np.int32)
+    padded = b * int(np.bincount(banks, minlength=b).max())
+    return rows, padded
+
+
+def apply_layout(mv_table: jnp.ndarray, cfg: StreamingCfg) -> jnp.ndarray:
+    """Re-lay the halo blocks ``[num_mv, P, C]`` for ``cfg.layout``.
+
+    Identity: returned unchanged. Bank-interleaved: rows scatter to their
+    bank-interleaved positions (``[num_mv, halo_rows, C]``, zero padding).
+    A pure value-preserving permutation — gathered features stay
+    bit-identical because the one-hot select contributes exactly one
+    nonzero product per corner regardless of row order.
+    """
+    if cfg.layout == "identity":
+        return mv_table
+    rows, padded = layout_row_map(cfg)
+    num_mv, p, c = mv_table.shape
+    out = jnp.zeros((num_mv, padded, c), mv_table.dtype)
+    return out.at[:, jnp.asarray(rows)].set(mv_table)
+
+
+def remap_local_ids(local_ids: jnp.ndarray, cfg: StreamingCfg) -> jnp.ndarray:
+    """Map x-major local corner ids to the layout's physical rows."""
+    if cfg.layout == "identity":
+        return local_ids
+    rows, _ = layout_row_map(cfg)
+    return jnp.asarray(rows)[local_ids]
+
+
+def bank_conflict_factor(cfg: StreamingCfg) -> float:
+    """Mean SRAM-bank serialization of one trilerp's 8 concurrent corner
+    reads (1.0 = conflict-free; k = worst bank serves k corners).
+
+    Rows interleave across ``num_banks`` banks (bank = row mod banks);
+    averaged over every voxel base in the halo block. The identity
+    (x-major) layout collides because corner offsets ``{1, edge+1,
+    (edge+1)^2, ...}`` share residues mod 8; the interleaved layout is
+    1.0 by construction.
+    """
+    e, p, b = cfg.mvoxel_edge, cfg.mvoxel_edge + 1, cfg.num_banks
+    if cfg.layout == "identity":
+        row_of = np.arange(p**3, dtype=np.int64)
+    else:
+        row_of = layout_row_map(cfg)[0].astype(np.int64)
+    base = np.stack(np.meshgrid(np.arange(e), np.arange(e), np.arange(e),
+                                indexing="ij"), -1).reshape(-1, 3)
+    corners = base[:, None, :] + np.asarray(grids._CORNERS)[None, :, :]
+    ids = (corners[..., 0] * p + corners[..., 1]) * p + corners[..., 2]
+    bank = row_of[ids] % b  # [voxels, 8]
+    worst = np.array([np.bincount(row, minlength=b).max() for row in bank])
+    return float(worst.mean())
+
+
 def build_mvoxel_table(table: jnp.ndarray, cfg: StreamingCfg) -> jnp.ndarray:
     """Global vertex table [res^3, C] -> per-MVoxel halo blocks
-    [num_mv, (edge+1)^3, C], contiguous in DRAM order (x-major MVoxel walk)."""
+    [num_mv, (edge+1)^3, C], contiguous in DRAM order (x-major MVoxel walk).
+    ``cfg.layout`` then re-lays each block's rows on-chip-bank-interleaved
+    (see :func:`apply_layout`); local corner ids must be remapped through
+    :func:`remap_local_ids` to match."""
     res, e, m = cfg.grid_res, cfg.mvoxel_edge, cfg.mv_per_edge
     p = e + 1
     grid = table.reshape(res, res, res, -1)
@@ -113,7 +226,7 @@ def build_mvoxel_table(table: jnp.ndarray, cfg: StreamingCfg) -> jnp.ndarray:
                                      (p, p, p, grid.shape[-1]))
 
     blocks = jax.vmap(extract)(starts)  # [num_mv, p, p, p, C]
-    return blocks.reshape(cfg.num_mvoxels, p**3, -1)
+    return apply_layout(blocks.reshape(cfg.num_mvoxels, p**3, -1), cfg)
 
 
 class RIT(NamedTuple):

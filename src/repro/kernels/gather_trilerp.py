@@ -1,23 +1,36 @@
 """Pallas TPU kernel: the Gathering Unit (paper §IV-B/C) adapted to TPU.
 
-One grid step = one MVoxel (the paper's streaming unit). The MVoxel's halo
-feature block is staged HBM→VMEM by the Pallas pipeline (which double-buffers
-— literally the paper's "standard double buffer" §IV-A), and the RIT-assigned
-ray samples for that MVoxel are processed while it is resident.
+One grid step = one (MVoxel, segment) pair (the MVoxel is the paper's
+streaming unit; the segment is the flat ray-batch core's per-session RIT
+bucket). The MVoxel's halo feature block is staged HBM→VMEM by the Pallas
+pipeline (which double-buffers — literally the paper's "standard double
+buffer" §IV-A), and the RIT-assigned ray samples for that MVoxel are
+processed while it is resident. Segments iterate on the *inner* grid
+dimension, so one staged block serves every segment before the pipeline
+advances to the next MVoxel.
 
 TPU adaptation of the GU (DESIGN.md §2):
 * channel-major layout  → channels on the minor (128-lane) axis of the VMEM
-  tile; concurrent lanes each own a channel — the bank-conflict-free layout.
+  tile; concurrent lanes each own a channel. On top of that,
+  ``StreamingCfg.layout="bank_interleaved"`` row-permutes the halo block so
+  the 8 corners of every voxel hit 8 distinct SRAM banks (the paper's
+  bank-conflict-free layout); ids arrive pre-remapped
+  (:func:`repro.core.streaming.remap_local_ids`) and the kernel itself is
+  layout-oblivious — the one-hot select works on any row order.
 * crossbar-free gather  → gather-as-matmul: an 8-way one-hot select matrix
   (built with broadcasted_iota compares, no scatter/crossbar) contracted with
   the resident feature block on the MXU. The B×M trilerp reducers become one
   [cap, P] × [P, C] matmul per corner.
 
 Shapes (padded by ops.py to sublane/lane multiples):
-  mv_table [num_mv, P, C]   — P = (edge+1)^3 halo points, C channels
-  ids      [num_mv, cap, 8] — per-sample local vertex ids (pad rows: 0)
-  weights  [num_mv, cap, 8] — trilerp weights (pad rows: 0 ⇒ output row 0)
-  out      [num_mv, cap, C]
+  mv_table [num_mv, P, C]             — P halo rows, C channels
+  ids      [num_seg * num_mv, cap, 8] — per-sample local row ids (pad: 0)
+  weights  [num_seg * num_mv, cap, 8] — trilerp weights (pad rows: 0)
+  out      [num_seg * num_mv, cap, C]
+
+There is ONE kernel body: the unsegmented entry is simply the
+``num_seg=1`` case of the segmented grid, so layout/gather changes land in
+exactly one place.
 """
 from __future__ import annotations
 
@@ -30,59 +43,30 @@ from jax.experimental import pallas as pl
 from repro.kernels.common import resolve_interpret
 
 
-def _kernel(tbl_ref, ids_ref, w_ref, out_ref):
-    tbl = tbl_ref[0]  # [P, C] — resident MVoxel (channel-major: C on lanes)
-    ids = ids_ref[0]  # [cap, 8]
-    w = w_ref[0]  # [cap, 8]
-    cap = ids.shape[0]
+def gather_block(tbl: jnp.ndarray, ids: jnp.ndarray, w: jnp.ndarray,
+                 out_dtype) -> jnp.ndarray:
+    """The GU inner loop on a VMEM-resident halo block.
+
+    ``tbl`` [P, C], ``ids``/``w`` [cap, 8] → [cap, C]. 8 statically
+    unrolled corner selects (the GU's 8 cycles), each a one-hot × weight
+    matmul on the MXU. Shared by the per-stage kernel below and the fused
+    streaming-pipeline kernel (kernels/streaming_pipeline.py), so every
+    gather in the codebase runs this exact body.
+    """
     p = tbl.shape[0]
     iota_p = jax.lax.broadcasted_iota(jnp.int32, (1, p), 1)  # [1, P]
-    acc = jnp.zeros((cap, tbl.shape[1]), jnp.float32)
-    for v in range(8):  # 8 voxel corners — static unroll (the GU's 8 cycles)
-        onehot = (ids[:, v : v + 1] == iota_p).astype(jnp.float32)  # [cap, P]
-        sel = onehot * w[:, v : v + 1]
-        acc = acc + jax.lax.dot(sel, tbl,
-                                preferred_element_type=jnp.float32)  # MXU
-    out_ref[0] = acc.astype(out_ref.dtype)
-
-
-@functools.partial(jax.jit, static_argnames=("interpret",))
-def gather_trilerp_mvoxels(mv_table: jnp.ndarray, ids: jnp.ndarray,
-                           weights: jnp.ndarray, *,
-                           interpret: bool | None = None) -> jnp.ndarray:
-    """Run the GU kernel over all MVoxels. Returns [num_mv, cap, C]."""
-    interpret = resolve_interpret(interpret)
-    num_mv, p, c = mv_table.shape
-    cap = ids.shape[1]
-    return pl.pallas_call(
-        _kernel,
-        grid=(num_mv,),
-        in_specs=[
-            # stream one MVoxel halo block per grid step (auto double-buffered)
-            pl.BlockSpec((1, p, c), lambda i: (i, 0, 0)),
-            pl.BlockSpec((1, cap, 8), lambda i: (i, 0, 0)),
-            pl.BlockSpec((1, cap, 8), lambda i: (i, 0, 0)),
-        ],
-        out_specs=pl.BlockSpec((1, cap, c), lambda i: (i, 0, 0)),
-        out_shape=jax.ShapeDtypeStruct((num_mv, cap, c), mv_table.dtype),
-        interpret=interpret,
-    )(mv_table, ids, weights)
-
-
-def _kernel_seg(tbl_ref, ids_ref, w_ref, out_ref):
-    """Segmented variant: identical math, 4-D block geometry."""
-    tbl = tbl_ref[0]  # [P, C] — the resident MVoxel halo block
-    ids = ids_ref[0, 0]  # [cap, 8]
-    w = w_ref[0, 0]  # [cap, 8]
-    p = tbl.shape[0]
-    iota_p = jax.lax.broadcasted_iota(jnp.int32, (1, p), 1)
     acc = jnp.zeros((ids.shape[0], tbl.shape[1]), jnp.float32)
     for v in range(8):  # 8 voxel corners — static unroll (the GU's 8 cycles)
-        onehot = (ids[:, v: v + 1] == iota_p).astype(jnp.float32)
+        onehot = (ids[:, v: v + 1] == iota_p).astype(jnp.float32)  # [cap, P]
         sel = onehot * w[:, v: v + 1]
         acc = acc + jax.lax.dot(sel, tbl,
-                                preferred_element_type=jnp.float32)
-    out_ref[0, 0] = acc.astype(out_ref.dtype)
+                                preferred_element_type=jnp.float32)  # MXU
+    return acc.astype(out_dtype)
+
+
+def _kernel(tbl_ref, ids_ref, w_ref, out_ref):
+    out_ref[0, 0] = gather_block(tbl_ref[0], ids_ref[0, 0], w_ref[0, 0],
+                                 out_ref.dtype)
 
 
 @functools.partial(jax.jit, static_argnames=("num_seg", "interpret"))
@@ -109,9 +93,11 @@ def gather_trilerp_mvoxels_segmented(mv_table: jnp.ndarray, ids: jnp.ndarray,
     ids4 = ids.reshape(num_seg, num_mv, cap, 8)
     w4 = weights.reshape(num_seg, num_mv, cap, 8)
     out = pl.pallas_call(
-        _kernel_seg,
+        _kernel,
         grid=(num_mv, num_seg),  # seg innermost: halo block stays resident
         in_specs=[
+            # stream one MVoxel halo block per outer step (auto double-
+            # buffered by the Pallas grid pipeline)
             pl.BlockSpec((1, p, c), lambda m, s: (m, 0, 0)),
             pl.BlockSpec((1, 1, cap, 8), lambda m, s: (s, m, 0, 0)),
             pl.BlockSpec((1, 1, cap, 8), lambda m, s: (s, m, 0, 0)),
@@ -122,3 +108,12 @@ def gather_trilerp_mvoxels_segmented(mv_table: jnp.ndarray, ids: jnp.ndarray,
         interpret=interpret,
     )(mv_table, ids4, w4)
     return out.reshape(num_seg * num_mv, cap, c)
+
+
+def gather_trilerp_mvoxels(mv_table: jnp.ndarray, ids: jnp.ndarray,
+                           weights: jnp.ndarray, *,
+                           interpret: bool | None = None) -> jnp.ndarray:
+    """Run the GU kernel over all MVoxels — the ``num_seg=1`` case of the
+    segmented grid (same compiled body). Returns [num_mv, cap, C]."""
+    return gather_trilerp_mvoxels_segmented(mv_table, ids, weights,
+                                            num_seg=1, interpret=interpret)

@@ -66,6 +66,8 @@ def gather_features_streaming(table: jnp.ndarray, points: jnp.ndarray,
         bucket, num_slots = mv, num_mv
     rit = streaming.build_rit(bucket, cfg, num_slots=num_slots)
     local_ids, w = streaming.local_corner_ids(points, cfg)
+    # match the (possibly bank-interleaved) physical row order of mv_table
+    local_ids = streaming.remap_local_ids(local_ids, cfg)
 
     # per-bucket sample blocks (RIT layout); padded rows use id 0 / weight 0
     sample_slot = jnp.maximum(rit.samples, 0)  # [num_slots, cap]

@@ -1,0 +1,214 @@
+"""The unified streaming render pipeline's Pallas stage (ROADMAP item 4).
+
+The staged tick runs reference render and pooled hole-fill as separate
+programs, and each ``lax.map`` ray chunk inside them re-streams the ENTIRE
+MVoxel halo table HBM→VMEM (one ``pallas_call`` sweep per chunk). Potamoi's
+point — and this module's job — is to collapse that into ONE sweep per
+tick: the tick's pooled hole samples and the NEXT tick's reference samples
+are bucketed into two RITs over the same (segment, MVoxel) iteration
+order, and a single fused kernel gathers BOTH sample sets from each halo
+block while it is resident. Each (segment, MVoxel) feature block is
+therefore fetched once per tick instead of once per ray-chunk per stage.
+
+Grid layout mirrors ``gather_trilerp_mvoxels_segmented``: ``(num_mv,
+num_seg)`` with segments innermost, so the Pallas grid pipeline stages one
+halo block (double-buffered — the paper's §IV-A revolving buffer: block
+``m+1`` DMAs in while ``m`` is being reduced) and reuses it across every
+segment AND both pipeline stages before advancing.
+
+Layout: the halo block arrives pre-laid-out by
+``streaming.build_mvoxel_table`` (``StreamingCfg.layout``) and the local
+corner ids pre-remapped — the kernel is layout-oblivious (the one-hot
+select matmul works on any row order), which is what makes the
+bank-interleaved layout bit-identical to the identity control.
+
+``tick_traffic`` is the analytic bytes-moved accounting for this pipeline
+(the Pallas path has no HLO to derive bytes from — the XLA/staged path's
+numbers come from ``roofline.hlo_cost``).
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Dict, NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.core import streaming
+from repro.kernels import gather_trilerp as _gt
+from repro.kernels.common import resolve_interpret
+from repro.nerf import grids
+
+
+def _fused_kernel(tbl_ref, ih_ref, wh_ref, ir_ref, wr_ref, oh_ref, or_ref):
+    """Both tick stages from ONE resident halo block: the pooled hole-fill
+    samples (this tick) and the reference samples (next tick) gather while
+    the block is in VMEM — the fetch-once-per-tick schedule."""
+    tbl = tbl_ref[0]  # [P, C] — staged once, used twice
+    oh_ref[0, 0] = _gt.gather_block(tbl, ih_ref[0, 0], wh_ref[0, 0],
+                                    oh_ref.dtype)
+    or_ref[0, 0] = _gt.gather_block(tbl, ir_ref[0, 0], wr_ref[0, 0],
+                                    or_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("num_seg", "interpret"))
+def fused_gather_dual(mv_table: jnp.ndarray,
+                      ids_h: jnp.ndarray, w_h: jnp.ndarray,
+                      ids_r: jnp.ndarray, w_r: jnp.ndarray, *,
+                      num_seg: int, interpret: bool | None = None
+                      ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """One MVoxel-table sweep serving BOTH tick stages.
+
+    ``ids_h``/``w_h`` are the hole-fill RIT blocks
+    ``[num_seg * num_mv, cap_h, 8]`` and ``ids_r``/``w_r`` the
+    next-reference RIT blocks ``[num_seg * num_mv, cap_r, 8]`` (segment-
+    major, same order as :func:`gather_trilerp_mvoxels_segmented`).
+    Returns ``([num_seg * num_mv, cap_h, C], [num_seg * num_mv, cap_r,
+    C])``. The halo block's BlockSpec depends only on the outer (MVoxel)
+    grid index, so the pipeline fetches it once per MVoxel and both
+    stages' gathers run against the resident copy.
+    """
+    interpret = resolve_interpret(interpret)
+    num_mv, p, c = mv_table.shape
+    cap_h, cap_r = ids_h.shape[1], ids_r.shape[1]
+    ih4 = ids_h.reshape(num_seg, num_mv, cap_h, 8)
+    wh4 = w_h.reshape(num_seg, num_mv, cap_h, 8)
+    ir4 = ids_r.reshape(num_seg, num_mv, cap_r, 8)
+    wr4 = w_r.reshape(num_seg, num_mv, cap_r, 8)
+    out_h, out_r = pl.pallas_call(
+        _fused_kernel,
+        grid=(num_mv, num_seg),  # seg innermost: halo block stays resident
+        in_specs=[
+            pl.BlockSpec((1, p, c), lambda m, s: (m, 0, 0)),
+            pl.BlockSpec((1, 1, cap_h, 8), lambda m, s: (s, m, 0, 0)),
+            pl.BlockSpec((1, 1, cap_h, 8), lambda m, s: (s, m, 0, 0)),
+            pl.BlockSpec((1, 1, cap_r, 8), lambda m, s: (s, m, 0, 0)),
+            pl.BlockSpec((1, 1, cap_r, 8), lambda m, s: (s, m, 0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, 1, cap_h, c), lambda m, s: (s, m, 0, 0)),
+            pl.BlockSpec((1, 1, cap_r, c), lambda m, s: (s, m, 0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((num_seg, num_mv, cap_h, c),
+                                 mv_table.dtype),
+            jax.ShapeDtypeStruct((num_seg, num_mv, cap_r, c),
+                                 mv_table.dtype),
+        ],
+        interpret=interpret,
+    )(mv_table, ih4, wh4, ir4, wr4)
+    return (out_h.reshape(num_seg * num_mv, cap_h, c),
+            out_r.reshape(num_seg * num_mv, cap_r, c))
+
+
+class _RitBlocks(NamedTuple):
+    ids_mv: jnp.ndarray   # [num_slots, cap, 8] — layout-remapped local ids
+    w_mv: jnp.ndarray     # [num_slots, cap, 8]
+    samples: jnp.ndarray  # [num_slots, cap] sample ids (-1 pad)
+    overflow: jnp.ndarray  # [T] bool
+
+
+def _rit_blocks(points: jnp.ndarray, seg: jnp.ndarray, num_seg: int,
+                cfg: streaming.StreamingCfg) -> _RitBlocks:
+    """Bucket one sample set per (segment, MVoxel) and lay its corner
+    ids/weights out in RIT order for the fused kernel (``cfg.capacity``
+    rows per bucket; padding seg ids >= num_seg drop out)."""
+    num_mv = cfg.num_mvoxels
+    mv = streaming.mvoxel_ids(points, cfg)
+    bucket = jnp.where(seg < num_seg, seg * num_mv + mv, num_seg * num_mv)
+    rit = streaming.build_rit(bucket, cfg, num_slots=num_seg * num_mv)
+    local_ids, w = streaming.local_corner_ids(points, cfg)
+    local_ids = streaming.remap_local_ids(local_ids, cfg)
+    sample_slot = jnp.maximum(rit.samples, 0)
+    valid = rit.samples >= 0
+    ids_mv = jnp.where(valid[..., None], local_ids[sample_slot], 0)
+    w_mv = jnp.where(valid[..., None], w[sample_slot], 0.0)
+    return _RitBlocks(ids_mv, w_mv, rit.samples, rit.overflow)
+
+
+def _scatter_with_fallback(out_mv: jnp.ndarray, blocks: _RitBlocks,
+                           table: jnp.ndarray, points: jnp.ndarray,
+                           cfg: streaming.StreamingCfg) -> jnp.ndarray:
+    """RIT-order kernel output back to sample order; RIT-overflow samples
+    take the reference (pixel-centric) gather on the ORIGINAL table — the
+    paper's fallback, layout-independent by construction."""
+    t = points.shape[0]
+    c = out_mv.shape[-1]
+    valid = blocks.samples >= 0
+    flat_sample = jnp.where(valid, blocks.samples, t).reshape(-1)
+    feats = jnp.zeros((t + 1, c), table.dtype).at[flat_sample].set(
+        out_mv.reshape(-1, c))
+    feats = feats[:t]
+    gids, gw = grids.corner_ids_weights(points, cfg.grid_res)
+    fallback = grids.gather_trilerp_ref(table, gids, gw)
+    return jnp.where(blocks.overflow[:, None], fallback, feats)
+
+
+def gather_features_tick(table: jnp.ndarray, mv_table: jnp.ndarray,
+                         cfg: streaming.StreamingCfg,
+                         pts_hole: jnp.ndarray, seg_hole: jnp.ndarray,
+                         pts_ref: jnp.ndarray, seg_ref: jnp.ndarray, *,
+                         num_seg: int, ref_cap_factor: int = 2,
+                         interpret: bool | None = None
+                         ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """The tick's ONE feature-gather pass: hole-fill + next-reference
+    samples through a single fused MVoxel-table sweep.
+
+    ``pts_hole``/``seg_hole`` are this tick's pooled hole samples (seg id
+    ``num_seg`` = dropped padding), ``pts_ref``/``seg_ref`` the next
+    tick's reference samples. The reference set is the denser stream (a
+    full frame per session vs. a hole pool), so its RIT capacity scales
+    by ``ref_cap_factor`` to keep the overflow-fallback rate comparable
+    to the staged path's per-chunk RITs. Returns (hole features
+    ``[Th, C]``, reference features ``[Tr, C]``) in sample order.
+    """
+    cfg_ref = dataclasses.replace(
+        cfg, capacity=cfg.capacity * ref_cap_factor)
+    bh = _rit_blocks(pts_hole, seg_hole, num_seg, cfg)
+    br = _rit_blocks(pts_ref, seg_ref, num_seg, cfg_ref)
+    out_h, out_r = fused_gather_dual(mv_table, bh.ids_mv, bh.w_mv,
+                                     br.ids_mv, br.w_mv, num_seg=num_seg,
+                                     interpret=interpret)
+    feats_h = _scatter_with_fallback(out_h, bh, table, pts_hole, cfg)
+    feats_r = _scatter_with_fallback(out_r, br, table, pts_ref, cfg)
+    return feats_h, feats_r
+
+
+# ---------------------------------------------------------------------------
+# analytic bytes-moved accounting (the Pallas pipeline's side of the
+# per-tick bytes_moved_per_frame metric; roofline.hlo_cost derives the
+# XLA/staged path's from compiled HLO)
+# ---------------------------------------------------------------------------
+
+
+def halo_block_bytes(cfg: streaming.StreamingCfg, channels: int,
+                     bytes_per_el: int = 4) -> int:
+    """HBM bytes of ONE staged MVoxel halo block under ``cfg.layout``."""
+    return cfg.halo_rows * channels * bytes_per_el
+
+
+def tick_traffic(cfg: streaming.StreamingCfg, channels: int, num_seg: int,
+                 cap_hole: int, cap_ref: int, bytes_per_el: int = 4
+                 ) -> Dict[str, float]:
+    """Analytic per-tick HBM traffic of the fused streaming pipeline.
+
+    The fused kernel runs exactly ONE sweep per tick: every halo block is
+    fetched once (``mvoxel_table_bytes``); the RIT side streams — per
+    (segment, MVoxel) block — ids + weights in and gathered features out
+    for both stages (``rit_bytes``). These are grid-schedule constants
+    (counted from the BlockSpecs, not measured), which is the point: the
+    Pallas pipeline's traffic is statically known.
+    """
+    num_mv = cfg.num_mvoxels
+    table_bytes = num_mv * halo_block_bytes(cfg, channels, bytes_per_el)
+    per_slot = (cap_hole + cap_ref) * 8 * (4 + 4)  # ids int32 + weights f32
+    out_bytes = (cap_hole + cap_ref) * channels * bytes_per_el
+    rit_bytes = num_seg * num_mv * (per_slot + out_bytes)
+    return {
+        "mvoxel_table_sweeps": 1.0,
+        "mvoxel_table_bytes": float(table_bytes),
+        "rit_bytes": float(rit_bytes),
+        "total_bytes": float(table_bytes + rit_bytes),
+    }

@@ -47,6 +47,11 @@ class NerfConfig:
     backend: str = "reference"  # reference | streaming (Pallas hot path)
     stream_mvoxel_edge: int = 8  # paper: 8^3-point MVoxels
     stream_capacity: int = 512  # RIT entry capacity (overflow -> fallback)
+    # physical row order of the MVoxel halo blocks: "identity" keeps raw
+    # (x,y,z) raster order (the parity control); "bank_interleaved" round-
+    # robins halo points across SRAM banks so a voxel's 8 corners never
+    # collide (paper §IV-C). Bit-identical outputs by construction.
+    mvoxel_layout: str = "identity"
     pallas_interpret: Optional[bool] = None  # None = auto (interpret on CPU)
 
     @property
@@ -132,7 +137,8 @@ class NerfModel:
         c = self.cfg
         return _streaming.StreamingCfg(grid_res=c.grid_res,
                                        mvoxel_edge=c.stream_mvoxel_edge,
-                                       capacity=c.stream_capacity)
+                                       capacity=c.stream_capacity,
+                                       layout=c.mvoxel_layout)
 
     def prepare_streaming(self, params: dict) -> dict:
         """Attach the prebuilt MVoxel halo table for the streaming backend.
@@ -142,11 +148,18 @@ class NerfModel:
         loop; it travels inside ``params`` as ``"mv_table"`` so jitted render
         functions receive it as a plain input. No-op for other backends/kinds.
         """
-        if self.cfg.backend != "streaming" or self.cfg.kind != "dvgo" \
-                or "mv_table" in params:
+        if self.cfg.backend != "streaming" or self.cfg.kind != "dvgo":
             return params
         from repro.core import streaming as _streaming
 
+        scfg = self.streaming_cfg
+        if "mv_table" in params:
+            if params["mv_table"].shape[1] == scfg.halo_rows:
+                return params
+            # staged under a different mvoxel_layout (row count differs) —
+            # a stale table would make every layout-remapped id miss;
+            # rebuild from the raw feature table instead of trusting it
+            params = {k: v for k, v in params.items() if k != "mv_table"}
         table = params["table"]
         if self._mv_table_cache is None or self._mv_table_cache[0] is not table:
             self._mv_table_cache = (table, _streaming.build_mvoxel_table(
@@ -193,6 +206,16 @@ class NerfModel:
         backend = backend or self.cfg.backend
         feats = self.query_features(params, points, backend=backend,
                                     seg=seg, num_seg=num_seg)
+        return self.decode_features(params, feats, dirs, backend=backend)
+
+    def decode_features(self, params: dict, feats: jnp.ndarray,
+                        dirs: jnp.ndarray, backend: Optional[str] = None
+                        ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+        """Decoder tail of :meth:`query_field` — gathered features →
+        (sigma, rgb). Split out so the unified streaming tick
+        (``raybatch.render_tick_streaming``) can run its ONE fused gather
+        and still share the exact decoder path with the staged pipeline."""
+        backend = backend or self.cfg.backend
         if backend == "streaming" and self.cfg.decoder == "mlp":
             from repro.kernels import ops
 

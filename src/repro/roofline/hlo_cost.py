@@ -230,3 +230,26 @@ def analyze(text: str) -> Dict[str, object]:
         # TPU keeps bf16 dot-grads bf16; CPU lowering upcast them to f32
         "weighted_coll_bytes_bf16wire": weighted - 0.5 * f32_share,
     }
+
+
+def analyze_compiled(compiled) -> Dict[str, object]:
+    """Run :func:`analyze` on a jit-compiled executable (the object
+    returned by ``jax.jit(f).lower(*args).compile()``). This is the
+    HLO-derived side of the per-tick ``bytes_moved_per_frame`` metric:
+    the staged (XLA-orchestrated) render tick gets its bytes from the
+    compiled module's HLO, while the fused Pallas pipeline's traffic is
+    analytic (``kernels.streaming_pipeline.tick_traffic`` — its bytes
+    live inside a custom call the HLO walker cannot see through)."""
+    return analyze(compiled.as_text())
+
+
+def bytes_moved_per_frame(analysis: Dict[str, object],
+                          frames_per_tick: int) -> float:
+    """Normalize a per-tick byte count to the serving unit the paper's
+    memory plots use: bytes moved per rendered frame. ``analysis`` is an
+    :func:`analyze`/:func:`analyze_compiled` result (or any mapping with
+    a ``"bytes"`` entry)."""
+    if frames_per_tick <= 0:
+        raise ValueError(f"frames_per_tick must be positive, got "
+                         f"{frames_per_tick}")
+    return float(analysis["bytes"]) / float(frames_per_tick)

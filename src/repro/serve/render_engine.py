@@ -464,6 +464,13 @@ class RenderServeEngine:
             "recompiles": len(engine.pool_buckets_used),
             "ladder_size": engine.pool_ladder_size,
         }
+        # per-tick MVoxel-table traffic accounting (streaming backend only:
+        # analytic staged-vs-fused sweep counts at this engine's shapes —
+        # what the serving tick would move on the staged path vs the
+        # unified streaming pipeline)
+        memory_metrics = (engine.tick_memory_stats(self.num_slots,
+                                                   self.window)
+                          if engine._seg_aware else None)
         return {
             "ticks": self.num_ticks - start_ticks,
             "wall_s": wall_s,
@@ -473,6 +480,7 @@ class RenderServeEngine:
             "complete": all(s.done for s in sessions),
             "policy": self.policy.name,
             "pool": pool_metrics,
+            "memory": memory_metrics,
             # session-sharding layout (1 = unsharded/single device)
             "devices": (self.engine.mesh.devices.size
                         if self.engine.mesh is not None else 1),

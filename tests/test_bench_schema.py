@@ -32,6 +32,22 @@ POOL_KEYS = {"enabled", "adaptive_sampling", "samples_per_tick",
 ADAPTIVE_KEYS = {"samples_per_tick", "work_reduction_vs_fixed_cap",
                  "max_abs_psnr_delta_vs_non_adaptive_db", "psnr_gate_db",
                  "psnr_gate_met"}
+MEMORY_ARM_KEYS = {"mvoxel_table_sweeps_per_tick",
+                   "mvoxel_table_bytes_per_tick",
+                   "mvoxel_table_bytes_per_frame", "hlo_bytes_per_tick",
+                   "hlo_bytes_per_frame"}
+MEMORY_KEYS = {"sessions", "window", "res", "ticks", "pool_bucket",
+               "config_fingerprint", "staged", "fused",
+               "bytes_moved_per_frame", "bytes_reduction_staged_over_fused",
+               "gate_min_reduction", "reduction_gate_met", "layout",
+               "parity"}
+MEMORY_LAYOUT_KEYS = {"mvoxel_layout", "halo_rows_identity",
+                      "halo_rows_interleaved",
+                      "bank_conflict_factor_identity",
+                      "bank_conflict_factor_interleaved"}
+MEMORY_PARITY_KEYS = {"min_psnr_fused_vs_staged_db",
+                      "layout_parity_bit_identical", "psnr_gate_db",
+                      "psnr_gate_met"}
 
 
 def _load():
@@ -145,6 +161,44 @@ def test_flat_batch_schema_and_gates():
     assert fb["parity_bit_identical"] is True
     # the Pallas execution mode the numbers were produced under is recorded
     assert isinstance(data["config"]["pallas_interpret"], bool)
+
+
+def test_memory_schema_and_gates():
+    """Unified streaming tick block: the fused pipeline must move >= 2x
+    fewer MVoxel-table bytes per frame than the staged path (it runs ONE
+    table sweep per tick — the sweep count is a compiled-schedule
+    constant), the bank-interleaved layout must be bit-identical to the
+    identity control, and fused-vs-staged output parity is recorded."""
+    data = _load()
+    assert "memory" in data, \
+        "BENCH_render.json lost the bytes-moved-per-frame baseline"
+    mem = data["memory"]
+    assert MEMORY_KEYS <= set(mem)
+    assert MEMORY_ARM_KEYS <= set(mem["staged"])
+    assert MEMORY_ARM_KEYS <= set(mem["fused"])
+    assert MEMORY_LAYOUT_KEYS <= set(mem["layout"])
+    assert MEMORY_PARITY_KEYS <= set(mem["parity"])
+    # the fused tick fetches every halo block exactly once — a schedule
+    # invariant, not a measurement; any other value means the pipeline
+    # regressed to multi-sweep streaming
+    assert mem["fused"]["mvoxel_table_sweeps_per_tick"] == 1.0
+    assert mem["staged"]["mvoxel_table_sweeps_per_tick"] >= 2.0
+    # headline acceptance gate: >= 2x fewer MVoxel-table bytes per frame
+    assert mem["gate_min_reduction"] == 2.0
+    assert mem["reduction_gate_met"] is True
+    assert mem["bytes_reduction_staged_over_fused"] >= 2.0
+    # internal consistency: per-frame = per-tick / (sessions * window)
+    frames = mem["sessions"] * mem["window"]
+    assert mem["bytes_moved_per_frame"] == \
+        mem["fused"]["mvoxel_table_bytes_per_tick"] / frames
+    # layout gate: the bank-interleaved permutation is value-exact
+    assert mem["parity"]["layout_parity_bit_identical"] is True
+    assert mem["parity"]["psnr_gate_met"] is True
+    assert mem["parity"]["min_psnr_fused_vs_staged_db"] >= 30.0
+    # the interleaved layout actually removes bank conflicts (identity
+    # packs corners into the same bank; interleave spreads all 8)
+    assert mem["layout"]["bank_conflict_factor_interleaved"] == 1.0
+    assert mem["layout"]["bank_conflict_factor_identity"] > 1.0
 
 
 def test_sharded_schema_and_gates():

@@ -70,6 +70,54 @@ ENTRY %main (p: bf16[128,64]) -> bf16[128,64] {
         res["weighted_coll_bytes"] - 128 * 64 * 4)
 
 
+def test_analyze_compiled_on_flat_core_tick():
+    """The walker on the ACTUAL flat-core jitted window tick (the XLA side
+    of the bytes_moved_per_frame metric): analyze_compiled must agree with
+    analyze(as_text()), report self-consistent flops/bytes, and be stable
+    across identical lowers of the same fixed tiny config (the golden
+    anchor — compiled-schedule constants, not measurements)."""
+    import jax.numpy as jnp
+
+    from repro import api
+    from repro.core.config import RenderConfig
+    from repro.core.engine import DeviceSparwEngine
+
+    cfg = RenderConfig(scene="lego", res=16, window=2, grid_res=16,
+                       channels=4, decoder="direct", num_samples=8,
+                       backend="reference", pool_holes=True).resolved()
+    r = api.make_renderer(cfg)
+    eng = DeviceSparwEngine(r.model, r.params, config=cfg)
+    s, n = 1, 2
+    refs = jnp.eye(4)[None]
+    tgts = jnp.stack([jnp.eye(4)] * n)[None]
+    win_lens, caps = eng._staged_masks(s, n)
+    bucket, bucket_c = eng._current_buckets()
+    pool_caps, pool_caps_c = eng._staged_pool_caps(s, bucket, bucket_c)
+
+    def lower():
+        return eng._windows_jit.lower(eng.params, refs, tgts, win_lens,
+                                      caps, pool_caps, pool_caps_c,
+                                      bucket, bucket_c).compile()
+
+    cc = lower()
+    res = hlo_cost.analyze_compiled(cc)
+    assert res == hlo_cost.analyze(cc.as_text())
+    # the tick is real work: a positive, finite flop/byte count with the
+    # feature table (grid_res^3 * channels * 4 bytes) read at least once
+    assert res["flops"] > 0
+    assert res["bytes"] >= 16**3 * 4 * 4
+    # deterministic: the same config lowers to the same cost surface
+    res2 = hlo_cost.analyze_compiled(lower())
+    assert res2["flops"] == res["flops"]
+    assert res2["bytes"] == res["bytes"]
+    # per-frame normalization divides by the tick's frame count exactly
+    bpf = hlo_cost.bytes_moved_per_frame(res, s * n)
+    assert bpf == res["bytes"] / (s * n)
+    import pytest
+    with pytest.raises(ValueError):
+        hlo_cost.bytes_moved_per_frame(res, 0)
+
+
 def test_roofline_report_terms():
     r = analysis.RooflineReport(
         arch="a", shape="s", mesh="single", num_devices=256,
