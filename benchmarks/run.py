@@ -158,7 +158,7 @@ def bench_render(frames: int = 32, res: int = 64, window: int = 4,
             prev = json.loads(out.read_text())
             if prev.get("config") == result["config"]:
                 for block in ("multi_session", "flat_batch", "sharded",
-                              "memory"):
+                              "memory", "fused_serving"):
                     if block in prev:
                         result[block] = prev[block]
         except (ValueError, OSError):
@@ -563,6 +563,141 @@ def bench_memory(sessions: int = 4, res: int = 64, window: int = 4,
     }
 
 
+def bench_fused_serving(sessions: int = 4, frames: int = 32, res: int = 64,
+                        window: int = 4, smoke: bool = False) -> dict:
+    """Fused streaming SERVING: the single-sweep unified tick threaded
+    through ``RenderServeEngine`` vs the staged serving path, on the same
+    fleet (``sessions + 1`` trajectories over ``sessions`` slots, so
+    queueing, slot reuse and mid-stream prime-on-admit are all on the
+    measured path).
+
+    Reports fused-vs-staged serving parity (min per-frame PSNR + identical
+    hole statistics — same warp geometry by construction), the serving
+    tick's MVoxel-table sweep accounting from the engine that actually ran
+    (steady-state 1 sweep/tick on the fused path vs the staged per-chunk
+    re-streams; admission primes amortized over the run), wall-clock for
+    both paths, and a transfer-guard probe that a steady-state fused tick
+    is dispatch-only. Gated in ``main()``: PSNR >= 30 dB, identical hole
+    stats, steady-state sweeps <= 2/tick, >= 2x sweep reduction,
+    transfer-free steady tick.
+    """
+    import time as _time
+
+    import jax
+    import numpy as np
+
+    from repro import api
+    from repro.core import pipeline
+    from repro.serve.render_engine import RenderServeEngine, RenderSession
+    from repro.utils import psnr
+
+    if smoke:
+        frames, res, window = 16, 32, 4
+    grid_res = 32 if smoke else 48
+    num_samples = 16 if smoke else 32
+    hole_cap = max(res * res // 8, 128)
+    cfg = _make_config(res, window, "device", backend="streaming",
+                       grid_res=grid_res, num_samples=num_samples,
+                       hole_cap=hole_cap, num_slots=sessions)
+    cfg_fused = cfg.replace(fused_tick=True)
+    shared = api.make_renderer(cfg)
+    params = {k: v for k, v in shared.params.items() if k != "mv_table"}
+
+    n_sessions = sessions + 1  # over-subscribe: force queueing + slot reuse
+    trajs = [pipeline.orbit_trajectory(frames, step_deg=1.0,
+                                       phase_deg=30.0 * i)
+             for i in range(n_sessions)]
+
+    def fleet():
+        return [RenderSession(sid=i, poses=list(t))
+                for i, t in enumerate(trajs)]
+
+    def run_arm(arm_cfg):
+        engine = RenderServeEngine(shared.model, params, config=arm_cfg)
+        cold_sessions = fleet()
+        t0 = _time.time()
+        cold = engine.run(cold_sessions)
+        cold_s = _time.time() - t0
+        t0 = _time.time()
+        warm = engine.run(fleet())
+        warm_s = _time.time() - t0
+        return engine, cold_sessions, cold, warm, cold_s, warm_s
+
+    eng_s, sess_s, m_s, w_s, staged_cold, staged_warm = run_arm(cfg)
+    eng_f, sess_f, m_f, w_f, fused_cold, fused_warm = run_arm(cfg_fused)
+
+    pair_psnr = [float(psnr(a, b))
+                 for ss, sf in zip(sess_s, sess_f)
+                 for a, b in zip(ss.frames, sf.frames)]
+    holes_identical = all(ss.stats.hole_fractions == sf.stats.hole_fractions
+                          for ss, sf in zip(sess_s, sess_f))
+
+    # steady-state transfer-guard probe: after a warm-up tick, a fused
+    # serving tick must be pure dispatch (the recurrence is threaded
+    # device-to-device; no admission => no prime, no mask staging)
+    probe = RenderServeEngine(shared.model, params, config=cfg_fused)
+    probe.submit([RenderSession(sid=i, poses=list(t[:3 * window]))
+                  for i, t in enumerate(trajs[:sessions])])
+    assert probe.step()
+    jax.block_until_ready(probe._last_result.frames)
+    try:
+        with jax.transfer_guard("disallow"):
+            probe.step()
+            jax.block_until_ready(probe._last_result.frames)
+        transfer_free = True
+    except Exception:
+        transfer_free = False
+
+    mem_f, mem_s = m_f["memory"], m_s["memory"]
+    total = n_sessions * frames
+    min_psnr = float(np.min(pair_psnr))
+    steady = mem_f["serving_table_sweeps_per_tick_steady"]
+    reduction = mem_s["serving_table_sweeps_per_tick_steady"] / steady
+    return {
+        "sessions": n_sessions,
+        "slots": sessions,
+        "frames_per_session": frames,
+        "window": window,
+        "res": res,
+        "config_fingerprint": cfg_fused.fingerprint(),
+        "staged": {
+            "wall_s_cold": staged_cold,
+            "wall_s_warm": staged_warm,
+            "aggregate_fps_warm": total / staged_warm,
+            "ticks": m_s["ticks"],
+            "serving_table_sweeps_per_tick":
+                mem_s["serving_table_sweeps_per_tick_steady"],
+            "pool_recompiles_cold": m_s["pool"]["recompiles"],
+            "pool_recompiles_warm": w_s["pool"]["recompiles"],
+        },
+        "fused": {
+            "wall_s_cold": fused_cold,
+            "wall_s_warm": fused_warm,
+            "aggregate_fps_warm": total / fused_warm,
+            "ticks": m_f["ticks"],
+            "admission_ticks": mem_f["admission_ticks"],
+            "serving_table_sweeps_per_tick_steady": steady,
+            "serving_table_sweeps_per_tick_amortized":
+                mem_f["serving_table_sweeps_per_tick_amortized"],
+            "pool_recompiles_cold": m_f["pool"]["recompiles"],
+            "pool_recompiles_warm": w_f["pool"]["recompiles"],
+        },
+        "speedup_fused_vs_staged_warm": staged_warm / fused_warm,
+        "serving_sweep_reduction_fused_vs_staged": reduction,
+        "gate_max_steady_sweeps": 2.0,
+        "steady_sweeps_gate_met": steady <= 2.0,
+        "gate_min_sweep_reduction": 2.0,
+        "sweep_reduction_gate_met": reduction >= 2.0,
+        "steady_tick_transfer_free": transfer_free,
+        "parity": {
+            "min_psnr_fused_vs_staged_db": min_psnr,
+            "hole_stats_identical": bool(holes_identical),
+            "psnr_gate_db": 30.0,
+            "psnr_gate_met": min_psnr >= 30.0,
+        },
+    }
+
+
 def bench_sharded(res: int = 64, window: int = 4, sessions: int = 2,
                   frames: int = 8, devices: int = 2) -> dict:
     """Multi-device session sharding probe: renders the same window batch
@@ -710,14 +845,21 @@ def main() -> None:
         # same fleet geometry as the serving bench
         res["memory"] = bench_memory(sessions=ms["sessions"], res=ms["res"],
                                      window=ms["window"], smoke=args.smoke)
+        # fused streaming serving: the unified tick driven by the ACTUAL
+        # serving engine (prime-on-admit + recurrence through slots)
+        res["fused_serving"] = bench_fused_serving(
+            sessions=ms["sessions"], frames=args.frames, res=ms["res"],
+            window=ms["window"], smoke=args.smoke)
         out = out or (ROOT / "BENCH_render.json")
         out.write_text(json.dumps(res, indent=2) + "\n")
         print(json.dumps({"multi_session": ms,
                           "flat_batch": res["flat_batch"],
                           "sharded": res["sharded"],
-                          "memory": res["memory"]}, indent=2))
+                          "memory": res["memory"],
+                          "fused_serving": res["fused_serving"]}, indent=2))
         print(f"# wrote {out} "
-              f"(with multi_session/flat_batch/sharded/memory)",
+              f"(with multi_session/flat_batch/sharded/memory/"
+              f"fused_serving)",
               flush=True)
         # acceptance gates (full config only — the 2-session smoke is too
         # small to amortize batching): batched serving must beat the
@@ -783,6 +925,35 @@ def main() -> None:
             print(f"FAIL: fused-vs-staged PSNR "
                   f"{mem['parity']['min_psnr_fused_vs_staged_db']:.1f} dB "
                   f"< 30 dB")
+            sys.exit(1)
+        # fused SERVING gates (all session counts, smoke included): the
+        # serving engine's fused tick must match the staged serving path
+        # (>= 30 dB, identical hole statistics), stream the halo table at
+        # most twice per steady-state tick (vs the staged per-chunk
+        # re-streams), and stay dispatch-only in steady state
+        fs = res["fused_serving"]
+        if not fs["parity"]["psnr_gate_met"]:
+            print(f"FAIL: fused-vs-staged SERVING PSNR "
+                  f"{fs['parity']['min_psnr_fused_vs_staged_db']:.1f} dB "
+                  f"< 30 dB")
+            sys.exit(1)
+        if not fs["parity"]["hole_stats_identical"]:
+            print("FAIL: fused serving hole statistics diverge from the "
+                  "staged serving path")
+            sys.exit(1)
+        if not fs["steady_sweeps_gate_met"]:
+            print(f"FAIL: fused serving tick streams the MVoxel table "
+                  f"{fs['fused']['serving_table_sweeps_per_tick_steady']:.1f}"
+                  f"x per steady tick (gate: <= 2)")
+            sys.exit(1)
+        if not fs["sweep_reduction_gate_met"]:
+            print(f"FAIL: fused serving sweep reduction "
+                  f"{fs['serving_sweep_reduction_fused_vs_staged']:.2f}x "
+                  f"< 2.0x vs staged serving")
+            sys.exit(1)
+        if not fs["steady_tick_transfer_free"]:
+            print("FAIL: steady-state fused serving tick performed a "
+                  "host transfer")
             sys.exit(1)
     if res["speedup"] < 1.0 and res["speedup_warm"] < 1.0:
         sys.exit(1)

@@ -29,15 +29,18 @@ echo "== quickstart under -W error::DeprecationWarning =="
 python -W error::DeprecationWarning examples/quickstart.py
 
 # Budget: 120 s for the historical smoke + 60 s for the sharded-parity
-# probe it now spawns (a fresh JAX subprocess — import + compile dominate
-# its cost on a cold CI machine).
-echo "== multi-session render smoke (<180 s budget) =="
+# probe it spawns (a fresh JAX subprocess — import + compile dominate its
+# cost on a cold CI machine) + 240 s for the fused-serving arm (four full
+# serve runs: staged/fused x cold/warm — the staged serving arm's
+# per-chunk table re-streams are exactly the cost the fused tick removes,
+# so the staged half dominates).
+echo "== multi-session render smoke (<420 s budget) =="
 start=$(date +%s)
 python benchmarks/run.py --smoke --sessions 2 --out /tmp/BENCH_render_ci.json
 elapsed=$(( $(date +%s) - start ))
 echo "smoke bench took ${elapsed}s"
-if (( elapsed > 180 )); then
-  echo "FAIL: smoke bench exceeded the 180 s budget" >&2
+if (( elapsed > 420 )); then
+  echo "FAIL: smoke bench exceeded the 420 s budget" >&2
   exit 1
 fi
 
@@ -119,5 +122,37 @@ if not mem["parity"]["psnr_gate_met"]:
     sys.exit("FAIL: fused-vs-staged PSNR "
              f"{mem['parity']['min_psnr_fused_vs_staged_db']:.2f} dB "
              "under gate")
+PY
+
+echo "== fused serving gate (staged-vs-fused parity + sweep count) =="
+# The fused SERVING tick drives the single-sweep streaming pipeline from
+# the real RenderServeEngine (prime-on-admit, recurrence through slots,
+# slot reuse). Gates: parity with the staged serving path (>= 30 dB,
+# identical hole statistics — same warp geometry by construction), a
+# steady-state serving tick streams the halo table at most twice (1 by
+# construction; any growth means the serving path regressed to staged
+# re-streaming), and the steady tick stays dispatch-only.
+python - <<'PY'
+import json, sys
+fs = json.load(open("/tmp/BENCH_render_ci.json")).get("fused_serving")
+if fs is None:
+    sys.exit("FAIL: smoke bench lost the fused_serving block")
+steady = fs["fused"]["serving_table_sweeps_per_tick_steady"]
+red = fs["serving_sweep_reduction_fused_vs_staged"]
+psnr = fs["parity"]["min_psnr_fused_vs_staged_db"]
+print(f"fused serving sweeps/tick (steady): {steady} "
+      f"({red:.1f}x under staged serving); parity {psnr:.1f} dB")
+if steady > 2.0:
+    sys.exit(f"FAIL: fused serving tick streams the table {steady}x "
+             "per steady tick (gate: <= 2)")
+if red < 2.0:
+    sys.exit(f"FAIL: fused serving sweep reduction {red:.1f}x < 2x")
+if psnr < 30.0:
+    sys.exit(f"FAIL: fused-vs-staged SERVING parity {psnr:.1f} dB < 30 dB")
+if not fs["parity"]["hole_stats_identical"]:
+    sys.exit("FAIL: fused serving hole statistics diverge from staged")
+if not fs["steady_tick_transfer_free"]:
+    sys.exit("FAIL: steady-state fused serving tick performed a host "
+             "transfer")
 PY
 echo "CI OK"

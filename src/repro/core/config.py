@@ -271,7 +271,12 @@ class RenderConfig:
     # streaming): the tick's pooled hole samples and the NEXT tick's
     # reference samples share ONE MVoxel-table sweep, so each (segment,
     # MVoxel) halo block is fetched once per tick instead of once per
-    # ray-chunk per stage. Requires backend="streaming".
+    # ray-chunk per stage. Covers BOTH the exclusive trajectory path
+    # (DeviceSparwEngine.render_trajectory) and the multi-session serving
+    # engine (RenderServeEngine threads the cross-tick reference
+    # recurrence through its slots, priming newly admitted sessions
+    # mid-stream). Requires backend="streaming"; not yet composable with
+    # session sharding (the recurrence arrays are not laid over a mesh).
     fused_tick: bool = False
     # On-chip layout of the staged MVoxel halo block (paper §on-chip data
     # layout): "identity" keeps halo points in x-major order (the parity
@@ -347,6 +352,11 @@ class RenderConfig:
             raise ValueError(
                 "fused_tick=True does not support adaptive_sampling: the "
                 "fused sweep carries one hole RIT, not a fine/coarse split")
+        if self.fused_tick and self.shard is not None and self.shard.enabled:
+            raise ValueError(
+                "fused_tick=True does not support session sharding yet: "
+                "the cross-tick reference recurrence is not laid over the "
+                "device mesh (serve fused sessions unsharded)")
         if self.shard is not None and self.shard.enabled \
                 and self.num_slots % self.shard.num_devices != 0:
             raise ValueError(

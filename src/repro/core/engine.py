@@ -172,16 +172,18 @@ class DeviceSparwEngine:
         self._windows_jit = jax.jit(self._render_windows,
                                     static_argnums=(7, 8))
         # --- unified streaming tick (fused ref→warp→hole-fill) ------------
-        # fused_tick routes render_trajectory through ONE dual-RIT MVoxel
-        # sweep per tick (raybatch.render_tick_streaming); the staged
-        # _windows_jit stays available (it is the bytes-moved baseline and
-        # the dense-fallback / serve path)
+        # fused_tick routes render_trajectory AND the serving engine's
+        # tick through ONE dual-RIT MVoxel sweep
+        # (raybatch.render_tick_streaming); the staged _windows_jit stays
+        # available (it is the bytes-moved baseline, the dense fallback,
+        # and the fused_tick=False serve path)
         self.fused_tick = bool(getattr(config, "fused_tick", False))
         if self.fused_tick and not self._seg_aware:
             raise ValueError(
                 "fused_tick requires a dvgo model on the streaming backend")
         self._tick_jit = jax.jit(self._tick_streaming, static_argnums=(9,))
         self._prime_jit = jax.jit(self._prime_reference)
+        self._prime_select_jit = jax.jit(self._prime_select)
         # staged full-window/full-cap defaults per (S, N) so a default
         # render_windows call never rebuilds them (and the serving engine's
         # explicit arrays follow the same staging discipline)
@@ -528,6 +530,30 @@ class DeviceSparwEngine:
     def prime_reference(self, ref_poses: jnp.ndarray
                         ) -> Tuple[jnp.ndarray, jnp.ndarray]:
         return self._prime_jit(self.params, ref_poses)
+
+    def _prime_select(self, params: dict, prime_poses: jnp.ndarray,
+                      mask: jnp.ndarray, rgb_ref: jnp.ndarray,
+                      dep_ref: jnp.ndarray
+                      ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+        rgb_p, dep_p = self._prime_reference(params, prime_poses)
+        return raybatch.substitute_reference_rows(mask, rgb_p, dep_p,
+                                                  rgb_ref, dep_ref)
+
+    def prime_reference_select(self, prime_poses: jnp.ndarray,
+                               mask: jnp.ndarray, rgb_ref: jnp.ndarray,
+                               dep_ref: jnp.ndarray
+                               ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+        """Mid-stream admission priming for the SERVING fused tick: render
+        the ``[S, 4, 4]`` poses through the staged flat reference stage and
+        substitute ONLY the rows where ``mask`` is True into the running
+        cross-tick recurrence (``rgb_ref``/``dep_ref``). Continuing
+        sessions' co-rendered references pass through bitwise untouched;
+        a reused slot's row is fully overwritten by the new occupant's
+        prime before any warp reads it. The dispatch shape is always the
+        full slot batch — one compile per S for the engine lifetime,
+        regardless of how many slots an admission tick fills."""
+        return self._prime_select_jit(self.params, prime_poses, mask,
+                                      rgb_ref, dep_ref)
 
     def _tick_streaming(self, params: dict, rgb_ref: jnp.ndarray,
                         dep_ref: jnp.ndarray, ref_poses: jnp.ndarray,

@@ -240,6 +240,27 @@ def render_tick_streaming(model, params: dict, cam: rays.Camera, *,
         ref_col.reshape(s, h, w, 3), ref_dep.reshape(s, h, w))
 
 
+def substitute_reference_rows(mask: jnp.ndarray, rgb_new: jnp.ndarray,
+                              dep_new: jnp.ndarray, rgb_ref: jnp.ndarray,
+                              dep_ref: jnp.ndarray
+                              ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Row-select freshly primed reference frames into a serving
+    recurrence: rows with ``mask`` True take the new render, every other
+    row keeps the running cross-tick reference BITWISE (``jnp.where`` is
+    an elementwise lane select — unselected rows pass through untouched).
+
+    This is the serving engine's slot-reuse leak-proofing primitive: a
+    newly admitted session's recurrence row is fully overwritten by its
+    own primed reference before any warp reads it, and continuing
+    sessions' co-rendered references are never re-rendered (which would
+    perturb their exclusive-run parity). ``mask`` [S] bool, ``rgb``
+    [S, H, W, 3], ``dep`` [S, H, W].
+    """
+    m = mask[:, None, None]
+    return (jnp.where(m[..., None], rgb_new, rgb_ref),
+            jnp.where(m, dep_new, dep_ref))
+
+
 # ---------------------------------------------------------------------------
 # session sharding (ShardConfig -> jax.sharding)
 # ---------------------------------------------------------------------------

@@ -212,3 +212,18 @@ def tick_traffic(cfg: streaming.StreamingCfg, channels: int, num_seg: int,
         "rit_bytes": float(rit_bytes),
         "total_bytes": float(table_bytes + rit_bytes),
     }
+
+
+def serving_sweeps_per_tick(total_ticks: int, admission_ticks: int,
+                            prime_sweeps: float) -> float:
+    """Amortized MVoxel-table sweeps per SERVING tick on the fused path.
+
+    Every fused serving tick runs exactly one table sweep; a tick that
+    admits sessions additionally pays the staged ``prime_reference``
+    dispatch, whose ``lax.map`` chunks each re-stream the table once
+    (``prime_sweeps`` — the engine's ``staged_ref_sweeps`` at the slot
+    batch shape). Steady state (no admissions) is therefore exactly 1.0,
+    and a serving run's amortized count approaches it as trajectories
+    outlive their admission tick.
+    """
+    return 1.0 + admission_ticks * prime_sweeps / max(total_ticks, 1)

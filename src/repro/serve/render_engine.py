@@ -41,6 +41,16 @@ Contracts inherited from the device engine:
 * **Session sharding** — with ``config.shard`` the flat batch's session
   axis is laid over a device mesh (``num_slots`` divisible by
   ``num_devices``; sessions pinned whole, scatters device-local).
+* **Fused streaming serving** — with ``config.fused_tick`` (streaming
+  backend) each tick is the single-sweep unified MVoxel pipeline of
+  :meth:`~repro.core.engine.DeviceSparwEngine.render_windows_streaming`
+  instead of the staged per-chunk path: the engine threads a
+  ``[num_slots, H, W]`` cross-tick reference recurrence from dispatch to
+  dispatch (tick t co-renders tick t+1's references inside its sweep),
+  and admission ticks prime newly admitted slots' rows with ONE batched
+  masked render (``prime_reference_select``) — so a steady-state serving
+  tick streams the halo table once, and a reused slot can never warp the
+  previous occupant's reference.
 
 Per-session reference poses are extrapolated with
 :class:`~repro.core.schedule.RefPoseExtrapolator` — the streamed form of
@@ -65,7 +75,8 @@ from repro.core.config import (
     RenderStats,
     legacy_config,
 )
-from repro.core.engine import BatchedWindowResult, DeviceSparwEngine
+from repro.core.engine import DeviceSparwEngine
+from repro.kernels import streaming_pipeline
 from repro.nerf import rays
 from repro.serve.policies import SchedulingPolicy, resolve_policy
 
@@ -123,6 +134,11 @@ class _Slot:
     # bucket ladder walks exactly like its exclusive run's)
     ctl: Optional[HoleCapController] = None
     ctl_c: Optional[HoleCapController] = None
+    # fused-tick recurrence: pose of the reference currently held in this
+    # slot's row of the engine's cross-tick reference arrays — set by
+    # prime-on-admit, then advanced every tick by the fused sweep's
+    # co-render (the next window's extrapolated pose)
+    ref_pose: Optional[jnp.ndarray] = None
 
 
 class RenderServeEngine:
@@ -194,9 +210,20 @@ class RenderServeEngine:
         # tick, where assignments[s] = (session, [frame indices], ctl,
         # ctl_c) or None
         self._pending: List[tuple] = []
-        self._last_result: Optional[BatchedWindowResult] = None
+        self._last_result = None
         # per finalized tick: pool bucket/occupancy telemetry for metrics
         self._pool_log: List[dict] = []
+        # --- fused streaming serving (RenderConfig.fused_tick) ------------
+        # cross-tick reference recurrence: row s of _rgb_ref/_dep_ref holds
+        # the reference frame the NEXT tick warps for slot s — co-rendered
+        # by the previous tick's fused MVoxel sweep, or freshly primed on
+        # the slot's admission tick. Device arrays threaded dispatch-to-
+        # dispatch, never read on the host (the zero-host-sync contract
+        # covers fused steady-state ticks too).
+        self.fused = self.engine.fused_tick
+        self._rgb_ref: Optional[jnp.ndarray] = None
+        self._dep_ref: Optional[jnp.ndarray] = None
+        self._num_admission_ticks = 0  # ticks that ran a prime dispatch
 
     # ------------------------------------------------------------------
     def _effective(self, sess: RenderSession) -> Tuple[int, int]:
@@ -225,18 +252,50 @@ class RenderServeEngine:
                     f"bucket {self.engine.pool_ctl.max_bucket}")
         return win, cap
 
+    def _live_sids(self) -> set:
+        """sids the engine currently owns: queued or occupying a slot
+        (completed sessions release their sid for reuse)."""
+        return ({s.sid for s in self.queue}
+                | {slot.session.sid for slot in self.slots
+                   if slot is not None})
+
     def submit(self, sessions: List[RenderSession]) -> None:
-        now = time.time()
+        """Queue sessions for admission. The WHOLE batch is validated
+        before any engine or session state changes: a rejected batch
+        leaves the engine and every session in it exactly as submitted
+        found them (no arrival stamps consumed), so the caller can fix
+        the offending session and resubmit the same objects. Duplicate
+        sids — within the batch or against a live (queued or in-slot)
+        session — are rejected: per-session metrics are keyed on sid, and
+        two live sessions sharing one would silently collapse into a
+        single metrics entry."""
+        live = self._live_sids()
+        batch_sids = set()
         for sess in sessions:
             self._effective(sess)  # fail fast on impossible overrides
+            if sess.sid in live or sess.sid in batch_sids:
+                raise ValueError(
+                    f"session sid {sess.sid} duplicates a live session "
+                    f"(sids must be unique among queued/in-flight sessions"
+                    f" — per-session metrics are keyed on sid)")
+            batch_sids.add(sess.sid)
+        now = time.time()
+        for sess in sessions:
             sess.arrival = self._num_submitted
             self._num_submitted += 1
             if sess.submitted_s is None:
                 sess.submitted_s = now
         self.queue.extend(sessions)
 
-    def _admit(self) -> None:
+    def _admit(self) -> List[int]:
+        """Fill free slots from the queue (policy choice); returns the
+        indices of the slots filled THIS tick. In fused mode the new
+        slot's first reference pose is computed here (the extrapolator
+        absorbs the first window exactly when the staged path would) —
+        the admission tick primes it into the recurrence before the
+        fused sweep warps it."""
         now = time.time()
+        newly: List[int] = []
         for s in range(self.num_slots):
             if self.slots[s] is None and self.queue:
                 sess = self.queue.pop(self.policy.select(self.queue, now))
@@ -249,11 +308,59 @@ class RenderServeEngine:
                               fixed=(sess.pool_bucket
                                      if sess.pool_bucket is not None
                                      else cfg.pool_bucket))
-                self.slots[s] = _Slot(
+                slot = _Slot(
                     session=sess, window=win, cap=cap,
                     extrapolator=schedule.RefPoseExtrapolator(window=win),
                     ctl=HoleCapController(**ctl_kw),
                     ctl_c=HoleCapController(**ctl_kw))
+                if self.fused:
+                    slot.ref_pose = slot.extrapolator.next_reference(
+                        sess.poses[:win])
+                self.slots[s] = slot
+                newly.append(s)
+        return newly
+
+    def _prime_admitted(self, newly: List[int]) -> None:
+        """Prime the recurrence rows of slots admitted this tick: ONE
+        batched staged reference dispatch over the full ``[num_slots]``
+        pose batch (new rows get their first window's reference pose,
+        everyone else the idle pose — their outputs are discarded by the
+        row select), then a bitwise masked substitute
+        (:meth:`~repro.core.engine.DeviceSparwEngine.prime_reference_select`).
+        Runs only on admission ticks — which already re-stage host-side
+        slot masks — so the steady-state zero-host-sync contract is
+        untouched, and the static dispatch shape means one prime compile
+        per engine lifetime.
+
+        Slot-reuse leak-proofing: a reused slot's row is either fully
+        overwritten here (mask True ⇒ ``jnp.where`` never reads the old
+        row's lanes into the output) or, while the slot sits idle, holds
+        a self-consistent idle-pose render (the drain tick co-renders the
+        idle reference into the row — see :meth:`step`), whose self-warp
+        has zero holes. The previous occupant's radiance can never reach
+        a later session's frames."""
+        first = self._rgb_ref is None
+        if not newly and not first:
+            return
+        engine = self.engine
+        if first:
+            # bootstrap: prime EVERY row (idle rows at the idle pose — the
+            # self-consistent idle recurrence) over a zero recurrence; the
+            # admitted rows' output is bitwise identical to any later
+            # admission's because the select path is the same program
+            h, w = engine.cam.height, engine.cam.width
+            self._rgb_ref = jnp.zeros((self.num_slots, h, w, 3))
+            self._dep_ref = jnp.zeros((self.num_slots, h, w))
+            mask = [True] * self.num_slots
+        else:
+            mask = [s in newly for s in range(self.num_slots)]
+        poses = [self.slots[s].ref_pose
+                 if mask[s] and self.slots[s] is not None
+                 else self._idle_pose for s in range(self.num_slots)]
+        self._rgb_ref, self._dep_ref = engine.prime_reference_select(
+            jnp.stack(poses), jnp.asarray(mask), self._rgb_ref,
+            self._dep_ref)
+        self._num_admission_ticks += 1
 
     def _stage_slot_masks(self) -> None:
         """Refresh the staged per-slot win_lens/caps/pool-caps device
@@ -290,25 +397,44 @@ class RenderServeEngine:
         choice), then ONE batched device call rendering every active
         session's next warp window. Dispatch-only — no device→host transfer
         happens here; call :meth:`finalize` (or :meth:`run`) to materialize
-        frames and stats. Returns False when no work remains."""
-        self._admit()
+        frames and stats. Returns False when no work remains.
+
+        With ``config.fused_tick`` the device call is the unified
+        streaming tick: the sweep warps the references CO-RENDERED by the
+        previous tick (held in the engine's recurrence arrays; newly
+        admitted slots primed this tick) and co-renders the next tick's
+        references — the serving form of the cross-tick pipelining in
+        :meth:`~repro.core.engine.DeviceSparwEngine.render_trajectory`.
+        A draining slot's last sweep co-renders an IDLE reference into
+        its row (ref pose == idle target pose ⇒ the idle self-warp stays
+        hole-free), so a freed slot's recurrence is self-consistent until
+        prime-on-admit overwrites it for the next occupant."""
+        newly = self._admit()
         if not any(s is not None for s in self.slots):
             return False
         self._stage_slot_masks()
+        if self.fused:
+            self._prime_admitted(newly)
 
-        ref_poses, tgt_poses, assignments = [], [], []
+        ref_poses, tgt_poses, next_refs, assignments = [], [], [], []
         for s in range(self.num_slots):
             slot = self.slots[s]
             if slot is None:
                 ref_poses.append(self._idle_pose)
                 tgt_poses.append([self._idle_pose] * self.window)
+                next_refs.append(self._idle_pose)
                 assignments.append(None)
                 continue
             sess = slot.session
             idxs = list(range(slot.cursor,
                               min(slot.cursor + slot.window, len(sess.poses))))
             win = [sess.poses[i] for i in idxs]
-            ref_poses.append(slot.extrapolator.next_reference(win))
+            if self.fused:
+                # the window's reference pose was already extrapolated —
+                # at admit (primed) or by the previous tick's co-render
+                ref_poses.append(slot.ref_pose)
+            else:
+                ref_poses.append(slot.extrapolator.next_reference(win))
             # pad short windows (per-session override and/or trajectory
             # tail) with the last real pose up to the engine's static batch
             # width — padded frames are rendered and discarded on the host,
@@ -318,14 +444,39 @@ class RenderServeEngine:
             sess.stats.reference_renders += 1
             slot.cursor += len(idxs)
             if slot.cursor >= len(sess.poses):
-                self.slots[s] = None  # slot reuse: free for the next admit
+                # slot reuse: free for the next admit. The fused sweep
+                # co-renders the idle reference into the freed row so the
+                # idle self-warp (and any later occupant, pre-prime) can
+                # never see this session's radiance.
+                next_refs.append(self._idle_pose)
+                self.slots[s] = None
+            elif self.fused:
+                nxt = range(slot.cursor,
+                            min(slot.cursor + slot.window, len(sess.poses)))
+                slot.ref_pose = slot.extrapolator.next_reference(
+                    [sess.poses[i] for i in nxt])
+                next_refs.append(slot.ref_pose)
+            else:
+                next_refs.append(self._idle_pose)
 
-        result = self.engine.render_windows(
-            jnp.stack(ref_poses),
-            jnp.stack([jnp.stack(t) for t in tgt_poses]),
-            self._win_lens, self._caps,
-            pool_caps=self._pool_caps, pool_caps_coarse=self._pool_caps_c,
-            bucket=self._tick_bucket, bucket_coarse=self._tick_bucket_c)
+        if self.fused:
+            result = self.engine.render_windows_streaming(
+                self._rgb_ref, self._dep_ref, jnp.stack(ref_poses),
+                jnp.stack([jnp.stack(t) for t in tgt_poses]),
+                jnp.stack(next_refs), self._win_lens, self._caps,
+                pool_caps=self._pool_caps, bucket=self._tick_bucket)
+            # thread the co-rendered references to the next dispatch —
+            # device-resident, never synced
+            self._rgb_ref = result.next_rgb_ref
+            self._dep_ref = result.next_dep_ref
+        else:
+            result = self.engine.render_windows(
+                jnp.stack(ref_poses),
+                jnp.stack([jnp.stack(t) for t in tgt_poses]),
+                self._win_lens, self._caps,
+                pool_caps=self._pool_caps,
+                pool_caps_coarse=self._pool_caps_c,
+                bucket=self._tick_bucket, bucket_coarse=self._tick_bucket_c)
         self._pending.append(
             (assignments, result, (self._tick_bucket, self._tick_bucket_c)))
         self._last_result = result
@@ -377,7 +528,7 @@ class RenderServeEngine:
                     fine_total=tick_fine, active_slots=active))
 
     def _observe_tick(self, tick_t0: float, assignments: List[tuple],
-                      result: BatchedWindowResult) -> None:
+                      result) -> None:
         """Block until a dispatched tick's device work completes and
         attribute its wall-clock to the sessions it served (a short tail
         window pays the whole tick over fewer frames)."""
@@ -406,6 +557,11 @@ class RenderServeEngine:
         self.submit(sessions)
         start_ticks = self.num_ticks  # the engine may be reused across runs
         log_start = len(self._pool_log)
+        # THIS run's recompile / admission spend, not engine-lifetime
+        # totals: a reused engine keeps its compiled-bucket cache (and its
+        # admission count) across runs, so report the deltas
+        buckets_start = len(self.engine.pool_buckets_used)
+        adm_start = self._num_admission_ticks
         t0 = time.time()
         in_flight = None  # (dispatch_t0, assignments, device result)
         while self.num_ticks - start_ticks < max_ticks:
@@ -461,16 +617,34 @@ class RenderServeEngine:
             "samples_per_tick_fixed_cap": fixed_spt,
             "work_reduction_vs_fixed_cap": fixed_spt / max(samples_last, 1),
             "utilization": util,
-            "recompiles": len(engine.pool_buckets_used),
+            "recompiles": len(engine.pool_buckets_used) - buckets_start,
             "ladder_size": engine.pool_ladder_size,
         }
         # per-tick MVoxel-table traffic accounting (streaming backend only:
         # analytic staged-vs-fused sweep counts at this engine's shapes —
         # what the serving tick would move on the staged path vs the
         # unified streaming pipeline)
-        memory_metrics = (engine.tick_memory_stats(self.num_slots,
-                                                   self.window)
-                          if engine._seg_aware else None)
+        memory_metrics = (engine.tick_memory_stats(
+            self.num_slots, self.window,
+            bucket=self._tick_bucket if self._tick_bucket else None)
+            if engine._seg_aware else None)
+        if memory_metrics is not None:
+            ticks_run = self.num_ticks - start_ticks
+            adm_ticks = self._num_admission_ticks - adm_start
+            fused = self.fused
+            memory_metrics["serving_path"] = "fused" if fused else "staged"
+            memory_metrics["admission_ticks"] = adm_ticks
+            # steady-state serving tick: ONE dual-RIT sweep on the fused
+            # path vs the staged per-chunk re-streams; admission ticks add
+            # the prime's staged reference sweeps, amortized over the run
+            memory_metrics["serving_table_sweeps_per_tick_steady"] = (
+                1.0 if fused
+                else memory_metrics["staged_table_sweeps_per_tick"])
+            memory_metrics["serving_table_sweeps_per_tick_amortized"] = (
+                streaming_pipeline.serving_sweeps_per_tick(
+                    ticks_run, adm_ticks,
+                    memory_metrics["staged_ref_sweeps"]) if fused
+                else memory_metrics["staged_table_sweeps_per_tick"])
         return {
             "ticks": self.num_ticks - start_ticks,
             "wall_s": wall_s,

@@ -48,6 +48,20 @@ MEMORY_LAYOUT_KEYS = {"mvoxel_layout", "halo_rows_identity",
 MEMORY_PARITY_KEYS = {"min_psnr_fused_vs_staged_db",
                       "layout_parity_bit_identical", "psnr_gate_db",
                       "psnr_gate_met"}
+FUSED_SERVING_KEYS = {"sessions", "slots", "frames_per_session", "window",
+                      "res", "config_fingerprint", "staged", "fused",
+                      "speedup_fused_vs_staged_warm",
+                      "serving_sweep_reduction_fused_vs_staged",
+                      "gate_max_steady_sweeps", "steady_sweeps_gate_met",
+                      "gate_min_sweep_reduction",
+                      "sweep_reduction_gate_met",
+                      "steady_tick_transfer_free", "parity"}
+FUSED_SERVING_ARM_KEYS = {"wall_s_cold", "wall_s_warm",
+                          "aggregate_fps_warm", "ticks",
+                          "pool_recompiles_cold", "pool_recompiles_warm"}
+FUSED_SERVING_PARITY_KEYS = {"min_psnr_fused_vs_staged_db",
+                             "hole_stats_identical", "psnr_gate_db",
+                             "psnr_gate_met"}
 
 
 def _load():
@@ -123,7 +137,9 @@ def test_pooled_capacity_schema_and_gates():
     if not data["config"]["smoke"]:
         assert pool["work_reduction_vs_fixed_cap"] >= 4.0
     assert 0.0 < pool["utilization"] <= 1.0
-    assert 1 <= pool["recompiles"] <= pool["ladder_size"]
+    # recompiles is THIS run's compile spend (a warm reused engine
+    # legitimately reports 0), still bounded by the pow2 bucket ladder
+    assert 0 <= pool["recompiles"] <= pool["ladder_size"]
     # adaptive sampling: recorded, cheaper than the non-adaptive pool, and
     # within the PSNR budget
     ad = ms["adaptive"]
@@ -154,7 +170,7 @@ def test_flat_batch_schema_and_gates():
     assert fb["flat_hole_capacity_per_tick_fixed_cap"] == fixed_cap
     assert fb["flat_hole_capacity_per_tick"] <= fixed_cap / 2
     assert fb["pool_work_reduction_vs_fixed_cap"] >= 2.0
-    assert 1 <= fb["pool_recompiles"] <= fb["pool_ladder_size"]
+    assert 0 <= fb["pool_recompiles"] <= fb["pool_ladder_size"]
     assert fb["warm_gate"] == 1.0
     assert fb["warm_gate_met"] is True
     assert fb["speedup_batched_vs_sequential_warm"] >= 1.0
@@ -199,6 +215,52 @@ def test_memory_schema_and_gates():
     # packs corners into the same bank; interleave spreads all 8)
     assert mem["layout"]["bank_conflict_factor_interleaved"] == 1.0
     assert mem["layout"]["bank_conflict_factor_identity"] > 1.0
+
+
+def test_fused_serving_schema_and_gates():
+    """Fused streaming SERVING block: the serving engine's single-sweep
+    tick must match the staged serving path (>= 30 dB with identical hole
+    statistics — same warp geometry), stream the MVoxel table at most
+    twice per steady-state tick (1 by construction; admission primes only
+    show up amortized), and stay dispatch-only in steady state."""
+    data = _load()
+    assert "fused_serving" in data, \
+        "BENCH_render.json lost the fused streaming serving baseline"
+    fs = data["fused_serving"]
+    assert FUSED_SERVING_KEYS <= set(fs)
+    assert FUSED_SERVING_ARM_KEYS <= set(fs["staged"])
+    assert FUSED_SERVING_ARM_KEYS <= set(fs["fused"])
+    assert FUSED_SERVING_PARITY_KEYS <= set(fs["parity"])
+    # over-subscribed fleet: queueing + slot reuse + prime-on-admit are on
+    # the measured path
+    assert fs["sessions"] > fs["slots"] >= 2
+    # steady-state sweep accounting: ONE dual-RIT sweep per fused serving
+    # tick (schedule constant), vs the staged per-chunk re-streams
+    assert fs["fused"]["serving_table_sweeps_per_tick_steady"] == 1.0
+    assert fs["gate_max_steady_sweeps"] == 2.0
+    assert fs["steady_sweeps_gate_met"] is True
+    assert fs["staged"]["serving_table_sweeps_per_tick"] >= 2.0
+    assert fs["gate_min_sweep_reduction"] == 2.0
+    assert fs["sweep_reduction_gate_met"] is True
+    assert fs["serving_sweep_reduction_fused_vs_staged"] >= 2.0
+    # amortized includes prime-on-admit sweeps, so it sits between the
+    # steady-state 1 and the staged count; >= 1 admission tick must have
+    # run (the fleet over-subscribes its slots)
+    assert fs["fused"]["admission_ticks"] >= 1
+    amort = fs["fused"]["serving_table_sweeps_per_tick_amortized"]
+    assert 1.0 <= amort < fs["staged"]["serving_table_sweeps_per_tick"]
+    # steady-state fused ticks are transfer-free (guarded probe)
+    assert fs["steady_tick_transfer_free"] is True
+    # parity: every frame of every session, fused vs staged serving
+    assert fs["parity"]["psnr_gate_db"] == 30.0
+    assert fs["parity"]["psnr_gate_met"] is True
+    assert fs["parity"]["min_psnr_fused_vs_staged_db"] >= 30.0
+    assert fs["parity"]["hole_stats_identical"] is True
+    # per-run recompile accounting: the warm rerun on the reused engine
+    # must spend nothing new on either path
+    assert fs["fused"]["pool_recompiles_cold"] >= 1
+    assert fs["fused"]["pool_recompiles_warm"] == 0
+    assert fs["staged"]["pool_recompiles_warm"] == 0
 
 
 def test_sharded_schema_and_gates():

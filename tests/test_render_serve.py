@@ -258,3 +258,178 @@ def test_pool_resize_recompiles_bounded_by_ladder(small_model, cam):
                  for i, t in enumerate(_trajs(2, 16))]
     pinned.run(psessions)
     assert pinned.engine.pool_buckets_used == {(bmax, 0)}
+
+
+# ---------------------------------------------------------------------------
+# submit() hygiene: duplicate sids, all-or-nothing validation
+# ---------------------------------------------------------------------------
+
+
+def test_duplicate_sid_rejected_among_live_sessions(small_model, cam):
+    """Per-session metrics are keyed on sid, so two live sessions sharing
+    one would silently collapse into a single metrics entry. submit()
+    rejects duplicates within a batch and against queued/in-slot
+    sessions; a COMPLETED session releases its sid for reuse."""
+    model, params = small_model
+    serve = RenderServeEngine(model, params,
+                              config=_cfg(cam, num_slots=2, window=2))
+    t = _trajs(1, 3)[0]
+    with pytest.raises(ValueError, match="duplicates a live session"):
+        serve.submit([RenderSession(sid=7, poses=list(t)),
+                      RenderSession(sid=7, poses=list(t))])
+    first = RenderSession(sid=7, poses=list(t))
+    serve.submit([first])
+    with pytest.raises(ValueError, match="duplicates a live session"):
+        serve.submit([RenderSession(sid=7, poses=list(t))])  # vs queued
+    serve.step()  # admit into a slot — still live
+    with pytest.raises(ValueError, match="duplicates a live session"):
+        serve.submit([RenderSession(sid=7, poses=list(t))])  # vs in-slot
+    while serve.step():
+        pass
+    serve.finalize()
+    assert first.done
+    reuse = RenderSession(sid=7, poses=list(t))
+    serve.run([reuse])  # sid released on completion
+    assert reuse.done
+
+
+def test_failed_submit_leaves_state_untouched(small_model, cam):
+    """submit() validates the WHOLE batch before mutating anything: a
+    rejected batch consumes no arrival stamps and leaves every session
+    object exactly as the caller built it, so fixing the offender and
+    resubmitting the same objects just works."""
+    model, params = small_model
+    serve = RenderServeEngine(model, params,
+                              config=_cfg(cam, num_slots=2, window=2))
+    t = _trajs(1, 3)[0]
+    batch = [RenderSession(sid=0, poses=list(t)),
+             RenderSession(sid=1, poses=list(t)),
+             RenderSession(sid=2, poses=list(t), window=99)]  # invalid
+    before = serve._num_submitted
+    with pytest.raises(ValueError, match="window override"):
+        serve.submit(batch)
+    assert serve.queue == []
+    assert serve._num_submitted == before
+    for sess in batch:
+        assert sess.arrival == -1 and sess.submitted_s is None
+    batch[2].window = None  # fix the offender; resubmit the SAME objects
+    metrics = serve.run(batch)
+    assert metrics["complete"]
+    assert [s.arrival for s in batch] == [0, 1, 2]
+
+
+def test_reused_engine_recompile_accounting(small_model, cam):
+    """run() reports the recompiles THIS run spent, not the engine's
+    lifetime bucket set: a second fleet on a warm engine that stays on
+    already-compiled ladder rungs must report zero."""
+    model, params = small_model
+    serve = RenderServeEngine(model, params,
+                              config=_cfg(cam, num_slots=2, window=2))
+    m1 = serve.run([RenderSession(sid=i, poses=list(t))
+                    for i, t in enumerate(_trajs(2, 8))])
+    assert m1["pool"]["recompiles"] >= 1  # cold engine compiled something
+    lifetime = len(serve.engine.pool_buckets_used)
+    m2 = serve.run([RenderSession(sid=i, poses=list(t))
+                    for i, t in enumerate(_trajs(2, 8))])
+    assert m2["complete"]
+    # same trajectories walk the same ladder rungs: nothing new compiled,
+    # and the per-run metric says so (lifetime count would not)
+    assert len(serve.engine.pool_buckets_used) == lifetime
+    assert m2["pool"]["recompiles"] == 0
+
+
+# ---------------------------------------------------------------------------
+# fused streaming serving (config.fused_tick through RenderServeEngine)
+# ---------------------------------------------------------------------------
+
+
+@pytest.fixture(scope="module")
+def fused_setup():
+    from repro import api
+
+    base = dict(scene="lego", res=24, window=2, grid_res=16, channels=4,
+                decoder="direct", num_samples=8, backend="streaming",
+                pool_holes=True, pallas_interpret=True, num_slots=2)
+    cfg_staged = RenderConfig(**base).resolved()
+    cfg_fused = cfg_staged.replace(fused_tick=True)
+    r = api.make_renderer(cfg_staged)
+    return r, cfg_staged, cfg_fused
+
+
+def test_fused_serving_matches_staged_serving(fused_setup):
+    """The fused serving tick (single-sweep streaming pipeline + cross-tick
+    reference recurrence + prime-on-admit) serves the same fleet as the
+    staged path: identical hole statistics (same warp geometry) and
+    float-precision frames, with slot reuse and queueing exercised."""
+    r, cfg_staged, cfg_fused = fused_setup
+    trajs = _trajs(3, 5, step_deg=4.0)  # 3 sessions over 2 slots
+    st = RenderServeEngine(r.model, r.params, config=cfg_staged)
+    fu = RenderServeEngine(r.model, r.params, config=cfg_fused)
+    s_sess = [RenderSession(sid=i, poses=list(t))
+              for i, t in enumerate(trajs)]
+    f_sess = [RenderSession(sid=i, poses=list(t))
+              for i, t in enumerate(trajs)]
+    m_s = st.run(s_sess)
+    m_f = fu.run(f_sess)
+    assert m_s["complete"] and m_f["complete"]
+    assert m_s["ticks"] == m_f["ticks"]
+    for a, b in zip(s_sess, f_sess):
+        assert a.stats.hole_fractions == b.stats.hole_fractions
+        for fa, fb in zip(a.frames, b.frames):
+            assert float(psnr(fa, fb)) >= 60.0
+    # the serving-tick traffic accounting reflects the dispatched path
+    assert m_f["memory"]["serving_path"] == "fused"
+    assert m_f["memory"]["serving_table_sweeps_per_tick_steady"] == 1.0
+    assert m_s["memory"]["serving_path"] == "staged"
+    assert (m_s["memory"]["serving_table_sweeps_per_tick_steady"]
+            == m_s["memory"]["staged_table_sweeps_per_tick"] > 2.0)
+    # admission ticks (initial bootstrap + the slot-reuse admit) amortize
+    # the prime's staged sweeps over the run; steady state stays at one
+    assert m_f["memory"]["admission_ticks"] >= 2
+    amort = m_f["memory"]["serving_table_sweeps_per_tick_amortized"]
+    assert 1.0 < amort < m_s["memory"]["staged_table_sweeps_per_tick"]
+
+
+def test_fused_serving_slot_reuse_reference_isolation(fused_setup):
+    """Leak-proof slot reuse on the recurrence: session B admitted into
+    A's drained slot gets BIT-IDENTICAL frames to its exclusive fused
+    run — prime-on-admit overwrites every lane of the reused row
+    (masked row select), so no trace of A's reference radiance can
+    reach B through the cross-tick reference arrays."""
+    r, _, cfg_fused = fused_setup
+    cfg = cfg_fused.replace(num_slots=1)  # B MUST reuse A's slot
+    t_a = pipeline.orbit_trajectory(4, step_deg=25.0)        # far from B
+    t_b = pipeline.orbit_trajectory(4, step_deg=4.0, phase_deg=180.0)
+    shared = RenderServeEngine(r.model, r.params, config=cfg)
+    a = RenderSession(sid=0, poses=list(t_a))
+    b = RenderSession(sid=1, poses=list(t_b))
+    shared.run([a, b])
+    assert a.done and b.done
+    exclusive = RenderServeEngine(r.model, r.params, config=cfg)
+    b_alone = RenderSession(sid=1, poses=list(t_b))
+    exclusive.run([b_alone])
+    assert b_alone.done
+    assert b.stats.hole_fractions == b_alone.stats.hole_fractions
+    for fa, fb in zip(b.frames, b_alone.frames):
+        np.testing.assert_array_equal(np.asarray(fa), np.asarray(fb))
+
+
+def test_fused_serving_tick_zero_host_syncs(fused_setup):
+    """The zero-host-sync contract survives the fused path: a steady-state
+    fused tick (no admissions => no prime dispatch, recurrence threaded
+    device-to-device) runs under ``jax.transfer_guard('disallow')``."""
+    r, _, cfg_fused = fused_setup
+    serve = RenderServeEngine(r.model, r.params, config=cfg_fused)
+    trajs = _trajs(2, 6, step_deg=4.0)
+    serve.submit([RenderSession(sid=i, poses=list(t))
+                  for i, t in enumerate(trajs)])
+    assert serve.step()  # warm-up: admission + prime + compile
+    jax.block_until_ready(serve._last_result.frames)
+    with jax.transfer_guard("disallow"):
+        assert serve.step()  # steady state: pure dispatch
+        jax.block_until_ready(serve._last_result.frames)
+    while serve.step():
+        pass
+    serve.finalize()
+    assert serve._pending == []
+    assert all(slot is None for slot in serve.slots)  # fully drained
