@@ -274,7 +274,11 @@ class NerfModel:
         """Jitted ``render_rays``, created once per model (not per call) so
         XLA's compile cache is shared by every renderer using this model."""
         if self._render_rays_jit is None:
-            self._render_rays_jit = jax.jit(self.render_rays)
+            # num_seg/num_samples shape the program (RIT slot count,
+            # samples per ray): traced they would crash int()/reshape at
+            # first non-default use — same statics as render_rays_flat_jit
+            self._render_rays_jit = jax.jit(
+                self.render_rays, static_argnames=("num_seg", "num_samples"))
         return self._render_rays_jit
 
     @property
