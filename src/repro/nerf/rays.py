@@ -78,13 +78,26 @@ def camera_dirs(cam: Camera) -> np.ndarray:
     return np.stack([x, y, np.ones_like(x)], axis=-1).reshape(-1, 3)
 
 
+@functools.lru_cache(maxsize=None)
+def camera_dirs_device(cam: Camera) -> jnp.ndarray:
+    """Device-resident :func:`camera_dirs` — uploaded ONCE per camera per
+    process, outside any trace. Converting the numpy constant inside a
+    jitted body instead would bake a ``device_put`` into every traced tick
+    program (re-uploading the pixel grid per compile — flagged by
+    ``repro.analysis``'s jaxpr-device-put rule). ``ensure_compile_time_eval``
+    keeps the upload out of the trace even when the cache is first warmed
+    from inside a jitted body."""
+    with jax.ensure_compile_time_eval():
+        return jnp.asarray(camera_dirs(cam))
+
+
 def generate_rays(cam: Camera, c2w: jnp.ndarray) -> Tuple[jnp.ndarray, jnp.ndarray]:
     """Per-pixel ray origins/directions in world space.
 
     Returns (origins [H*W, 3], directions [H*W, 3]); directions are unit-norm.
     Row-major pixel order — the *pixel-centric* order the paper starts from.
     """
-    dirs_world = jnp.asarray(camera_dirs(cam)) @ c2w[:3, :3].T
+    dirs_world = camera_dirs_device(cam) @ c2w[:3, :3].T
     dirs_world = dirs_world / jnp.linalg.norm(dirs_world, axis=-1, keepdims=True)
     origins = jnp.broadcast_to(c2w[:3, 3], dirs_world.shape)
     return origins, dirs_world
