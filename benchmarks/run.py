@@ -45,6 +45,18 @@ def _make_config(res: int, window: int, engine: str, *,
                         stream_capacity=512).resolved()
 
 
+def _analysis_block() -> dict:
+    """Static-checker state at bench time: perf numbers in BENCH_render.json
+    are only trusted against a clean (0 unsuppressed findings) repo, so the
+    checker's verdict rides along with them."""
+    from repro.analysis import run_repo_analysis
+
+    report, _ = run_repo_analysis(ROOT)
+    summary = report.summary()
+    return {"rules": summary["rules"], "findings": summary["findings"],
+            "suppressed": summary["suppressed"]}
+
+
 def _run_variant(renderer, traj, reps: int = 3):
     """Cold pass (includes compiles — the real end-to-end cost of a fresh
     renderer) + warm pass (steady-state execution)."""
@@ -132,6 +144,7 @@ def bench_render(frames: int = 32, res: int = 64, window: int = 4,
             "min_psnr_device_vs_host_db": float(min(pair_psnr)),
             "max_abs_psnr_delta_vs_baseline_db": psnr_delta,
         },
+        "analysis": _analysis_block(),
     }
 
     if smoke:

@@ -19,6 +19,12 @@ if [[ "${1:-}" == "--full" ]]; then
   MARK=''
 fi
 
+echo "== static invariant checks (<60 s budget) =="
+# scripts/lint.sh runs the repro.analysis three-pass checker (jaxpr + AST
+# + Pallas) over the whole repo and exits nonzero on any unsuppressed
+# finding; it enforces its own 60 s budget.
+./scripts/lint.sh
+
 echo "== tier-1 tests =="
 python -m pytest -x -q ${MARK:+-m "$MARK"}
 

@@ -1,0 +1,26 @@
+#!/usr/bin/env bash
+# Static invariant checker fast lane: jaxpr + AST + Pallas passes over the
+# whole repo (see src/repro/analysis/README.md for the rule catalog).
+#
+#   ./scripts/lint.sh                 # full three-pass run, exit 1 on any
+#                                     # unsuppressed finding
+#   ./scripts/lint.sh --json out.json # also dump the machine summary
+#
+# Budget: < 60 s. The jaxpr pass traces the real jitted tick programs via
+# jax.make_jaxpr (no device execution), so the whole run is import + trace
+# bound (~6 s on a warm cache, ~20 s cold).
+set -euo pipefail
+cd "$(dirname "$0")/.."
+export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
+export JAX_PLATFORMS="${JAX_PLATFORMS:-cpu}"
+
+start=$(date +%s)
+status=0
+python -m repro.analysis "$@" || status=$?
+elapsed=$(( $(date +%s) - start ))
+echo "lint took ${elapsed}s"
+if (( elapsed > 60 )); then
+  echo "FAIL: static analysis exceeded the 60 s fast-lane budget" >&2
+  exit 1
+fi
+exit "$status"

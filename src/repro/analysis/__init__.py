@@ -1,0 +1,19 @@
+"""repro.analysis — static invariant checker for the serving engine.
+
+Three passes over the repo (see README.md for the rule catalog):
+
+1. **AST lint** (:mod:`repro.analysis.astlint`) — stdlib-``ast`` rules for
+   jit/tracing misuse, raw ``hash()`` seeding, mutable frozen-dataclass
+   defaults and bare ``pallas_call`` sites.
+2. **jaxpr** (:mod:`repro.analysis.jaxpr_pass`) — traces the real jitted
+   tick programs and statically proves them transfer-free, static-shaped
+   and fingerprint-covered.
+3. **Pallas** (:mod:`repro.analysis.pallas_pass`) — captures every
+   kernel's real launch geometry via a ``pallas_call`` spy and validates
+   BlockSpec divisibility, VMEM budgets and MVoxel bank interleaving.
+
+Run with ``python -m repro.analysis`` (or ``scripts/lint.sh``).
+"""
+from repro.analysis.cli import main, run_repo_analysis  # noqa: F401
+from repro.analysis.findings import Finding, Report  # noqa: F401
+from repro.analysis.jitprobe import JitCacheProbe  # noqa: F401

@@ -1,0 +1,394 @@
+"""AST lint pass: repo-specific JAX/Pallas rules on stdlib ``ast`` only.
+
+Rules (ids are stable — tests and suppressions key on them):
+
+- ``jit-traced-bool-if``     Python ``if``/``while``/``assert`` branching on
+                             a ``jnp``/``jax`` expression inside a jitted
+                             body (concretization error / silent trace burn).
+- ``jit-host-sync``          ``.item()`` / ``np.asarray`` / ``np.array`` in a
+                             jitted body, or ``int()``/``float()``/``bool()``
+                             applied to a parameter not covered by
+                             ``static_argnums``/``static_argnames``.
+- ``jit-missing-static``     a ``jax.jit`` site whose wrapped function takes
+                             a known compile-shaping parameter (``num_seg``,
+                             ``bucket``, ``interpret``, …) that the site does
+                             not mark static.
+- ``raw-hash``               builtin ``hash()`` outside ``__hash__`` —
+                             process-randomized under PYTHONHASHSEED, so any
+                             seed/cache-key derived from it is unstable.
+- ``mutable-default-frozen`` mutable default on a frozen dataclass field
+                             (shared-state leak across "immutable" configs).
+- ``pallas-no-interpret``    a ``pl.pallas_call`` whose enclosing function
+                             does not resolve its backend through
+                             ``kernels/common.resolve_interpret`` or omits
+                             the ``interpret=`` kwarg.
+
+Scope: only *direct* jit targets are body-scanned (decorated with
+``jax.jit``/``functools.partial(jax.jit, …)`` or passed to a ``jax.jit(…)``
+call in the same module, including bound ``self.method`` references).
+Functions merely *called from* a jitted body are not traced transitively —
+see README.md.
+"""
+from __future__ import annotations
+
+import ast
+from pathlib import Path
+from typing import Dict, Iterable, List, Optional, Sequence, Set, Tuple
+
+from repro.analysis.findings import Finding
+
+# Parameter names that shape the compiled program anywhere in this repo.
+# A jit site whose wrapped function takes one of these and does not mark it
+# static either recompiles per value (traced int) or crashes on first use
+# in Python control flow.
+STATIC_PARAM_NAMES: frozenset = frozenset({
+    "interpret", "num_seg", "num_samples", "bucket", "bucket_coarse",
+    "block", "block_q", "block_k", "causal", "kv_len", "quantum",
+})
+
+_HOST_NP_ROOTS = {"np", "numpy", "onp"}
+_TRACED_ROOTS = {"jnp", "jax", "lax"}
+_SCALARIZERS = {"int", "float", "bool", "complex"}
+
+
+def _attr_root(node: ast.AST) -> Optional[str]:
+    """Root Name of a dotted attribute chain (``jax.lax.cond`` → ``jax``)."""
+    while isinstance(node, ast.Attribute):
+        node = node.value
+    return node.id if isinstance(node, ast.Name) else None
+
+
+def _func_params(fn: ast.AST) -> List[str]:
+    a = fn.args
+    names = [p.arg for p in a.posonlyargs] + [p.arg for p in a.args]
+    return names + [p.arg for p in a.kwonlyargs]
+
+
+def _positional_params(fn: ast.AST) -> List[str]:
+    a = fn.args
+    return [p.arg for p in a.posonlyargs] + [p.arg for p in a.args]
+
+
+def _const_strs(node: ast.AST) -> List[str]:
+    if isinstance(node, ast.Constant) and isinstance(node.value, str):
+        return [node.value]
+    if isinstance(node, (ast.Tuple, ast.List, ast.Set)):
+        return [e.value for e in node.elts
+                if isinstance(e, ast.Constant) and isinstance(e.value, str)]
+    return []
+
+
+def _const_ints(node: ast.AST) -> List[int]:
+    if isinstance(node, ast.Constant) and isinstance(node.value, int):
+        return [node.value]
+    if isinstance(node, (ast.Tuple, ast.List)):
+        return [e.value for e in node.elts
+                if isinstance(e, ast.Constant) and isinstance(e.value, int)]
+    return []
+
+
+def _is_jax_jit(node: ast.AST) -> bool:
+    """True for ``jax.jit`` / bare ``jit`` references."""
+    if isinstance(node, ast.Attribute):
+        return node.attr == "jit" and _attr_root(node) == "jax"
+    return isinstance(node, ast.Name) and node.id == "jit"
+
+
+def _partial_jit_statics(call: ast.Call) -> Optional[Dict[str, object]]:
+    """If ``call`` is ``functools.partial(jax.jit, …)``, return its static
+    kwargs ({'names': […], 'nums': […]}); else None."""
+    f = call.func
+    is_partial = (isinstance(f, ast.Name) and f.id == "partial") or (
+        isinstance(f, ast.Attribute) and f.attr == "partial")
+    if not (is_partial and call.args and _is_jax_jit(call.args[0])):
+        return None
+    return _jit_statics_from_keywords(call.keywords)
+
+
+def _jit_statics_from_keywords(keywords) -> Dict[str, object]:
+    names: List[str] = []
+    nums: List[int] = []
+    for kw in keywords:
+        if kw.arg == "static_argnames":
+            names.extend(_const_strs(kw.value))
+        elif kw.arg == "static_argnums":
+            nums.extend(_const_ints(kw.value))
+    return {"names": names, "nums": nums}
+
+
+class _JitSite:
+    """One place a function becomes a jit target."""
+
+    def __init__(self, fn: ast.AST, line: int, col: int,
+                 static_names: Sequence[str], static_nums: Sequence[int],
+                 bound: bool):
+        self.fn = fn  # FunctionDef | Lambda
+        self.line, self.col = line, col
+        # ``bound``: jitted as ``self.method`` — argnums index past self
+        pos = _positional_params(fn)
+        if bound and pos and pos[0] == "self":
+            pos = pos[1:]
+        covered = set(static_names)
+        for i in static_nums:
+            if 0 <= i < len(pos):
+                covered.add(pos[i])
+        self.covered: Set[str] = covered
+
+
+def _collect_jit_sites(tree: ast.Module) -> List[_JitSite]:
+    """All jit targets in a module: decorated defs + ``jax.jit(fn, …)``
+    call sites (module functions, ``self.method`` bound refs, lambdas)."""
+    defs: Dict[str, ast.AST] = {}
+    for node in ast.walk(tree):
+        if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            defs.setdefault(node.name, node)
+
+    sites: List[_JitSite] = []
+    for node in ast.walk(tree):
+        if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            for dec in node.decorator_list:
+                if _is_jax_jit(dec):
+                    sites.append(_JitSite(node, node.lineno, node.col_offset,
+                                          [], [], bound=False))
+                elif isinstance(dec, ast.Call):
+                    if _is_jax_jit(dec.func):
+                        st = _jit_statics_from_keywords(dec.keywords)
+                        sites.append(_JitSite(node, node.lineno,
+                                              node.col_offset, st["names"],
+                                              st["nums"], bound=False))
+                    else:
+                        st = _partial_jit_statics(dec)
+                        if st is not None:
+                            sites.append(_JitSite(node, node.lineno,
+                                                  node.col_offset,
+                                                  st["names"], st["nums"],
+                                                  bound=False))
+        elif isinstance(node, ast.Call) and _is_jax_jit(node.func):
+            if not node.args:
+                continue
+            target, st = node.args[0], _jit_statics_from_keywords(node.keywords)
+            if isinstance(target, ast.Lambda):
+                sites.append(_JitSite(target, node.lineno, node.col_offset,
+                                      st["names"], st["nums"], bound=False))
+            elif isinstance(target, ast.Name) and target.id in defs:
+                sites.append(_JitSite(defs[target.id], node.lineno,
+                                      node.col_offset, st["names"],
+                                      st["nums"], bound=False))
+            elif (isinstance(target, ast.Attribute)
+                  and target.attr in defs):
+                bound = (isinstance(target.value, ast.Name)
+                         and target.value.id == "self")
+                sites.append(_JitSite(defs[target.attr], node.lineno,
+                                      node.col_offset, st["names"],
+                                      st["nums"], bound=bound))
+    return sites
+
+
+# ---------------------------------------------------------------------------
+# per-rule checks
+# ---------------------------------------------------------------------------
+
+
+def _contains_traced_call(node: ast.AST) -> Optional[ast.Call]:
+    for sub in ast.walk(node):
+        if isinstance(sub, ast.Call) and _attr_root(sub.func) in _TRACED_ROOTS:
+            return sub
+    return None
+
+
+def _check_jit_body(site: _JitSite, path: str) -> Iterable[Finding]:
+    nodes = ast.walk(site.fn)
+    params = set(_func_params(site.fn)) - {"self"}
+    uncovered = params - site.covered
+    for node in nodes:
+        # --- traced-bool branching ------------------------------------
+        if isinstance(node, (ast.If, ast.While, ast.IfExp, ast.Assert)):
+            bad = _contains_traced_call(node.test)
+            if bad is not None:
+                yield Finding(
+                    "jit-traced-bool-if", path, node.lineno, node.col_offset,
+                    "Python control flow on a traced expression inside a "
+                    "jitted body — use jnp.where/lax.cond or hoist to a "
+                    "static argument")
+        # --- host syncs -----------------------------------------------
+        if isinstance(node, ast.Call):
+            f = node.func
+            if isinstance(f, ast.Attribute) and f.attr == "item":
+                yield Finding(
+                    "jit-host-sync", path, node.lineno, node.col_offset,
+                    ".item() inside a jitted body forces a device-to-host "
+                    "transfer at trace time")
+            elif (isinstance(f, ast.Attribute)
+                  and f.attr in {"asarray", "array"}
+                  and _attr_root(f) in _HOST_NP_ROOTS):
+                yield Finding(
+                    "jit-host-sync", path, node.lineno, node.col_offset,
+                    f"np.{f.attr}() on a traced value materializes it on "
+                    "the host — use jnp instead")
+            elif (isinstance(f, ast.Name) and f.id in _SCALARIZERS
+                  and node.args
+                  and isinstance(node.args[0], ast.Name)
+                  and node.args[0].id in uncovered):
+                yield Finding(
+                    "jit-host-sync", path, node.lineno, node.col_offset,
+                    f"{f.id}({node.args[0].id}) scalarizes a traced "
+                    f"parameter — mark '{node.args[0].id}' static at the "
+                    "jit site or keep it on-device")
+
+
+def _check_missing_static(site: _JitSite, path: str) -> Iterable[Finding]:
+    params = set(_func_params(site.fn)) - {"self"}
+    missing = sorted((params & STATIC_PARAM_NAMES) - site.covered)
+    if missing:
+        yield Finding(
+            "jit-missing-static", path, site.line, site.col,
+            f"jit site leaves compile-shaping parameter(s) "
+            f"{', '.join(missing)} traced — add static_argnames/"
+            f"static_argnums or every distinct value recompiles/crashes")
+
+
+def _check_raw_hash(tree: ast.Module, path: str) -> Iterable[Finding]:
+    hash_owners: Set[int] = set()  # id() of nodes under a __hash__ def
+    for node in ast.walk(tree):
+        if (isinstance(node, ast.FunctionDef) and node.name == "__hash__"):
+            hash_owners.update(id(sub) for sub in ast.walk(node))
+    for node in ast.walk(tree):
+        if (isinstance(node, ast.Call) and isinstance(node.func, ast.Name)
+                and node.func.id == "hash" and id(node) not in hash_owners):
+            yield Finding(
+                "raw-hash", path, node.lineno, node.col_offset,
+                "builtin hash() is randomized per process "
+                "(PYTHONHASHSEED) — derive seeds/cache keys from "
+                "zlib.crc32 or hashlib instead (see utils.fold_rng)")
+
+
+_MUTABLE_CTORS = {"list", "dict", "set", "bytearray"}
+
+
+def _is_mutable_default(node: ast.AST) -> bool:
+    if isinstance(node, (ast.List, ast.Dict, ast.Set, ast.ListComp,
+                         ast.DictComp, ast.SetComp)):
+        return True
+    if isinstance(node, ast.Call):
+        f = node.func
+        if isinstance(f, ast.Name) and f.id in _MUTABLE_CTORS:
+            return True
+        if (isinstance(f, ast.Attribute) and f.attr in {"array", "zeros",
+                                                        "ones", "empty"}):
+            return True
+    return False
+
+
+def _check_frozen_defaults(tree: ast.Module, path: str) -> Iterable[Finding]:
+    for cls in ast.walk(tree):
+        if not isinstance(cls, ast.ClassDef):
+            continue
+        frozen = False
+        for dec in cls.decorator_list:
+            if isinstance(dec, ast.Call):
+                is_dc = ((isinstance(dec.func, ast.Name)
+                          and dec.func.id == "dataclass")
+                         or (isinstance(dec.func, ast.Attribute)
+                             and dec.func.attr == "dataclass"))
+                if is_dc and any(kw.arg == "frozen"
+                                 and isinstance(kw.value, ast.Constant)
+                                 and kw.value.value is True
+                                 for kw in dec.keywords):
+                    frozen = True
+        if not frozen:
+            continue
+        for stmt in cls.body:
+            if not isinstance(stmt, ast.AnnAssign) or stmt.value is None:
+                continue
+            default = stmt.value
+            if (isinstance(default, ast.Call)
+                    and ((isinstance(default.func, ast.Name)
+                          and default.func.id == "field")
+                         or (isinstance(default.func, ast.Attribute)
+                             and default.func.attr == "field"))):
+                for kw in default.keywords:
+                    if kw.arg == "default":
+                        default = kw.value
+                        break
+                else:
+                    continue
+            if _is_mutable_default(default):
+                yield Finding(
+                    "mutable-default-frozen", path, stmt.lineno,
+                    stmt.col_offset,
+                    "mutable default on a frozen dataclass field — shared "
+                    "across instances and breaks the hashability the "
+                    "config/fingerprint contract relies on")
+
+
+def _check_pallas_interpret(tree: ast.Module, path: str) -> Iterable[Finding]:
+    # map each pallas_call to its enclosing function def
+    parents: Dict[int, ast.AST] = {}
+    for node in ast.walk(tree):
+        if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            for sub in ast.walk(node):
+                parents.setdefault(id(sub), node)
+    for node in ast.walk(tree):
+        if not (isinstance(node, ast.Call)
+                and isinstance(node.func, ast.Attribute)
+                and node.func.attr == "pallas_call"):
+            continue
+        has_interpret = any(kw.arg == "interpret" for kw in node.keywords)
+        fn = parents.get(id(node))
+        resolves = False
+        if fn is not None:
+            for sub in ast.walk(fn):
+                if isinstance(sub, ast.Call):
+                    f = sub.func
+                    name = f.id if isinstance(f, ast.Name) else (
+                        f.attr if isinstance(f, ast.Attribute) else None)
+                    if name == "resolve_interpret":
+                        resolves = True
+                        break
+        if not (has_interpret and resolves):
+            what = ("missing interpret= kwarg" if not has_interpret
+                    else "backend not resolved via resolve_interpret")
+            yield Finding(
+                "pallas-no-interpret", path, node.lineno, node.col_offset,
+                f"pl.pallas_call {what} — every kernel must route its "
+                "interpret flag through kernels/common.resolve_interpret "
+                "so CPU CI and accelerator lanes share one code path")
+
+
+ALL_RULES = ("jit-traced-bool-if", "jit-host-sync", "jit-missing-static",
+             "raw-hash", "mutable-default-frozen", "pallas-no-interpret")
+
+
+def lint_source(src: str, path: str) -> List[Finding]:
+    """Run every AST rule on one module's source. ``path`` is the
+    repo-relative anchor used in findings."""
+    try:
+        tree = ast.parse(src)
+    except SyntaxError as e:
+        return [Finding("syntax-error", path, e.lineno or 1, 0, str(e))]
+    out: List[Finding] = []
+    seen: Set[Tuple] = set()
+    for site in _collect_jit_sites(tree):
+        for f in _check_missing_static(site, path):
+            out.append(f)
+        for f in _check_jit_body(site, path):
+            key = (f.rule, f.line, f.col)  # same def jitted at 2 sites
+            if key not in seen:
+                seen.add(key)
+                out.append(f)
+    out.extend(_check_raw_hash(tree, path))
+    out.extend(_check_frozen_defaults(tree, path))
+    out.extend(_check_pallas_interpret(tree, path))
+    return out
+
+
+def lint_paths(root: Path, rel_paths: Iterable[str]) -> List[Finding]:
+    out: List[Finding] = []
+    for rel in rel_paths:
+        p = root / rel
+        try:
+            src = p.read_text()
+        except OSError:
+            continue
+        out.extend(lint_source(src, rel))
+    return out

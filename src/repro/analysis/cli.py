@@ -1,0 +1,101 @@
+"""CLI driver for the three-pass static checker.
+
+``python -m repro.analysis`` runs the AST lint, jaxpr and Pallas passes
+over the repo, applies inline suppressions, prints the findings report and
+exits nonzero on any unsuppressed finding. ``--json`` additionally writes
+the ``{rules, findings, suppressed, per_rule, ...}`` summary consumed by
+``benchmarks/run.py`` for the ``analysis`` block of ``BENCH_render.json``.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+import time
+from pathlib import Path
+from typing import List
+
+from repro.analysis import astlint
+from repro.analysis.findings import Finding, Report, apply_suppressions
+
+# directories scanned by the AST pass (repo-relative)
+SCAN_DIRS = ("src", "benchmarks", "tests", "scripts")
+
+
+def repo_root(start: Path = None) -> Path:
+    p = (start or Path.cwd()).resolve()
+    for cand in (p, *p.parents):
+        if (cand / "src" / "repro").is_dir():
+            return cand
+    return p
+
+
+def python_files(root: Path) -> List[str]:
+    rels: List[str] = []
+    for d in SCAN_DIRS:
+        base = root / d
+        if base.is_dir():
+            rels.extend(sorted(
+                p.relative_to(root).as_posix() for p in base.rglob("*.py")))
+    return rels
+
+
+def run_repo_analysis(root: Path, passes=("ast", "jaxpr", "pallas")):
+    """Run the selected passes; returns (Report, stats dict)."""
+    findings: List[Finding] = []
+    rules: List[str] = []
+    stats = {}
+    t0 = time.perf_counter()
+    if "ast" in passes:
+        findings.extend(astlint.lint_paths(root, python_files(root)))
+        rules.extend(astlint.ALL_RULES)
+    if "jaxpr" in passes:
+        from repro.analysis import jaxpr_pass
+
+        fs, st = jaxpr_pass.run(root)
+        findings.extend(fs)
+        rules.extend(jaxpr_pass.ALL_RULES)
+        stats["jaxpr"] = st
+    if "pallas" in passes:
+        from repro.analysis import pallas_pass
+
+        fs, st = pallas_pass.run(root)
+        findings.extend(fs)
+        rules.extend(pallas_pass.ALL_RULES)
+        stats["pallas"] = st
+    findings = apply_suppressions(findings, root)
+    stats["seconds"] = round(time.perf_counter() - t0, 2)
+    return Report(findings=findings, rules_run=rules), stats
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="python -m repro.analysis",
+        description="static invariant checker: AST lint + jaxpr trace + "
+                    "Pallas kernel validation")
+    ap.add_argument("--root", type=Path, default=None,
+                    help="repo root (default: auto-detect from cwd)")
+    ap.add_argument("--json", type=Path, default=None,
+                    help="write the summary dict to this path")
+    ap.add_argument("--skip-pass", action="append", default=[],
+                    choices=["ast", "jaxpr", "pallas"],
+                    help="skip a pass (repeatable)")
+    args = ap.parse_args(argv)
+    root = repo_root(args.root)
+    passes = tuple(p for p in ("ast", "jaxpr", "pallas")
+                   if p not in args.skip_pass)
+    report, stats = run_repo_analysis(root, passes)
+    print(report.format())
+    summary = report.summary()
+    summary["passes"] = list(passes)
+    summary["seconds"] = stats["seconds"]
+    if "jaxpr" in stats:
+        summary["steady_tick_transfer_free"] = (
+            stats["jaxpr"].get("steady_tick_transfer_free"))
+    if args.json:
+        args.json.write_text(json.dumps(summary, indent=2, sort_keys=True))
+    return 1 if report.active else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,50 @@
+"""jit-cache instrumentation: count recompiles across a window of work.
+
+``JitCacheProbe`` snapshots the ``_cache_size()`` of every jitted entry
+point on a :class:`~repro.core.engine.DeviceSparwEngine` (staged windows,
+fused tick, priming) and reports the delta — the number of NEW traced
+programs a stretch of serving work compiled. The serving engine's contract
+is steady-state delta == 0: after warmup, ticks reuse compiled programs
+(recompiles only on admission shape changes, bounded by the pool ladder).
+
+Used by ``tests/test_analysis.py``'s steady-state probe; kept here (not in
+tests) so benchmarks and future passes can reuse the same instrumentation.
+"""
+from __future__ import annotations
+
+from typing import Dict
+
+_JIT_ATTRS = ("_windows_jit", "_tick_jit", "_prime_jit", "_prime_select_jit")
+
+
+def _cache_sizes(engine) -> Dict[str, int]:
+    sizes: Dict[str, int] = {}
+    for attr in _JIT_ATTRS:
+        fn = getattr(engine, attr, None)
+        if fn is not None and hasattr(fn, "_cache_size"):
+            sizes[attr] = fn._cache_size()
+    return sizes
+
+
+class JitCacheProbe:
+    """Recompile counter over an engine's jitted entry points.
+
+    >>> probe = JitCacheProbe(engine)
+    >>> ... serving work ...
+    >>> probe.recompiles()   # new cache entries since construction
+    """
+
+    def __init__(self, engine):
+        self.engine = engine
+        self.baseline = _cache_sizes(engine)
+
+    def reset(self) -> None:
+        self.baseline = _cache_sizes(self.engine)
+
+    def delta(self) -> Dict[str, int]:
+        now = _cache_sizes(self.engine)
+        return {k: now.get(k, 0) - self.baseline.get(k, 0)
+                for k in set(now) | set(self.baseline)}
+
+    def recompiles(self) -> int:
+        return sum(max(0, d) for d in self.delta().values())

@@ -401,6 +401,37 @@ class RenderConfig:
         return dataclasses.replace(self, **kw) if kw else self
 
 
+# Fields intentionally EXCLUDED from the compile fingerprint. fingerprint()
+# hashes repr(self.resolved()), so a field only escapes it via repr=False —
+# any such field must be listed here with a reason, or
+# verify_fingerprint_coverage() refuses to import. Empty today: every
+# RenderConfig field shapes (or is harmlessly folded into) the compiled
+# program, and keeping the allowlist explicit is what lets the analyzer's
+# fingerprint-drift guard fail loudly when someone adds a repr=False field.
+_NON_COMPILE_FIELDS: frozenset = frozenset()
+
+
+def verify_fingerprint_coverage() -> None:
+    """Every ``RenderConfig`` field must reach ``fingerprint()`` (which
+    hashes the dataclass repr) or be explicitly allowlisted in
+    ``_NON_COMPILE_FIELDS``. A field with ``repr=False`` that is not
+    allowlisted silently escapes the fingerprint — the stale-engine-cache
+    bug class (PR 4) this guard exists to prevent. Enforced at import
+    time and re-checked by ``repro.analysis``'s jaxpr pass."""
+    escaped = [f.name for f in dataclasses.fields(RenderConfig)
+               if not f.repr and f.name not in _NON_COMPILE_FIELDS]
+    if escaped:
+        raise RuntimeError(
+            f"RenderConfig field(s) {escaped} have repr=False and are "
+            "absent from _NON_COMPILE_FIELDS: they would silently escape "
+            "fingerprint() and stale compiled engines could be served. "
+            "Either drop repr=False or allowlist the field with a "
+            "justification in _NON_COMPILE_FIELDS.")
+
+
+verify_fingerprint_coverage()
+
+
 # ---------------------------------------------------------------------------
 # RenderRequest / RenderResult — the workload surface
 # ---------------------------------------------------------------------------

@@ -62,6 +62,7 @@ FUSED_SERVING_ARM_KEYS = {"wall_s_cold", "wall_s_warm",
 FUSED_SERVING_PARITY_KEYS = {"min_psnr_fused_vs_staged_db",
                              "hole_stats_identical", "psnr_gate_db",
                              "psnr_gate_met"}
+ANALYSIS_KEYS = {"rules", "findings", "suppressed"}
 
 
 def _load():
@@ -261,6 +262,23 @@ def test_fused_serving_schema_and_gates():
     assert fs["fused"]["pool_recompiles_cold"] >= 1
     assert fs["fused"]["pool_recompiles_warm"] == 0
     assert fs["staged"]["pool_recompiles_warm"] == 0
+
+
+def test_analysis_schema_and_gates():
+    """Static invariant checker block: BENCH numbers are only trusted
+    against a repo the checker passes clean, so its verdict is recorded
+    alongside them. Gates: the rule catalog never shrinks below the 14
+    rules shipped with repro.analysis, and the committed baseline has 0
+    unsuppressed findings (suppressions are inline and justified, so the
+    suppressed count is informational)."""
+    data = _load()
+    assert "analysis" in data, \
+        "BENCH_render.json lost the static-analysis baseline"
+    an = data["analysis"]
+    assert ANALYSIS_KEYS <= set(an)
+    assert an["rules"] >= 14
+    assert an["findings"] == 0
+    assert an["suppressed"] >= 0
 
 
 def test_sharded_schema_and_gates():

@@ -18,6 +18,7 @@ def test_config_is_frozen_and_value_hashable():
     a = RenderConfig(res=32, window=4)
     b = RenderConfig(res=32, window=4)
     c = RenderConfig(res=32, window=8)
+    # lint: disable=raw-hash -- within-process hashability (dict-key contract)
     assert a == b and hash(a) == hash(b)
     assert a != c
     with pytest.raises(dataclasses.FrozenInstanceError):
@@ -150,3 +151,62 @@ def test_stats_shared_type_reexported():
     from repro.core.pipeline import RenderStats as PipelineStats
 
     assert EngineStats is RenderStats and PipelineStats is RenderStats
+
+
+# ---------------------------------------------------------------------------
+# fingerprint drift guard (repro.analysis satellite): every field must
+# reach fingerprint() or be explicitly allowlisted
+# ---------------------------------------------------------------------------
+
+
+def test_every_config_field_reaches_fingerprint_or_allowlist():
+    """Static half of the guard: fingerprint() hashes repr(resolved()), so
+    a field escapes only via repr=False — and any such field must be
+    allowlisted in _NON_COMPILE_FIELDS with a justification."""
+    from repro.core.config import _NON_COMPILE_FIELDS, verify_fingerprint_coverage
+
+    for f in dataclasses.fields(RenderConfig):
+        assert f.repr or f.name in _NON_COMPILE_FIELDS, \
+            f"RenderConfig.{f.name} escapes fingerprint() and is not " \
+            f"allowlisted in _NON_COMPILE_FIELDS"
+    verify_fingerprint_coverage()  # the import-time guard agrees
+
+
+def test_every_config_field_mutation_flips_fingerprint():
+    """Dynamic half: actually mutate every field (on a base config that
+    satisfies its cross-field validators) and require the fingerprint to
+    flip — proves coverage end-to-end rather than via repr introspection."""
+    from repro.core.config import ShardConfig
+
+    mutations = {
+        "scene": "chair", "camera": rays.Camera.square(24), "res": 32,
+        "window": 8, "phi_deg": 7.5, "hole_cap": 64, "mode": "temporal",
+        "engine": "host", "num_slots": 8, "ray_chunk": 2048,
+        "shard": ShardConfig(num_devices=2), "pallas_interpret": True,
+        "pool_holes": False, "pool_bucket": 256, "pool_min_bucket": 256,
+        "pool_safety": 1.5, "pool_ewma_alpha": 0.2,
+        "adaptive_sampling": True, "adaptive_var_threshold": 0.1,
+        "coarse_factor": 2, "fused_tick": True,
+        "mvoxel_layout": "bank_interleaved", "model_kind": "tensorf",
+        "backend": "streaming", "grid_res": 24, "channels": 8,
+        "decoder": "mlp", "num_samples": 16, "stream_capacity": 256,
+    }
+    # bases cover the validator combinations individual mutations need
+    bases = [RenderConfig(),
+             RenderConfig(backend="streaming"),
+             RenderConfig(num_slots=4)]
+    for f in dataclasses.fields(RenderConfig):
+        assert f.name in mutations, \
+            f"new field RenderConfig.{f.name}: add a mutation here so the " \
+            f"fingerprint drift guard keeps covering every field"
+        flipped = False
+        for base in bases:
+            try:
+                mut = dataclasses.replace(base, **{f.name: mutations[f.name]})
+            except (ValueError, TypeError):
+                continue
+            assert mut != base, f"mutation for {f.name} is a no-op"
+            flipped = base.fingerprint() != mut.fingerprint()
+            break
+        assert flipped, f"mutating RenderConfig.{f.name} must flip the " \
+                        f"fingerprint (or no base accepted the mutation)"
