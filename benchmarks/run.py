@@ -171,7 +171,7 @@ def bench_render(frames: int = 32, res: int = 64, window: int = 4,
             prev = json.loads(out.read_text())
             if prev.get("config") == result["config"]:
                 for block in ("multi_session", "flat_batch", "sharded",
-                              "memory", "fused_serving"):
+                              "memory", "fused_serving", "load"):
                     if block in prev:
                         result[block] = prev[block]
         except (ValueError, OSError):
@@ -863,16 +863,21 @@ def main() -> None:
         res["fused_serving"] = bench_fused_serving(
             sessions=ms["sessions"], frames=args.frames, res=ms["res"],
             window=ms["window"], smoke=args.smoke)
+        # open-loop multi-scene load harness (Poisson/Zipf/heavy-tail over
+        # the device-resident scene pager, with an overload-shedding phase)
+        from benchmarks.load import bench_load
+        res["load"] = bench_load(smoke=args.smoke)
         out = out or (ROOT / "BENCH_render.json")
         out.write_text(json.dumps(res, indent=2) + "\n")
         print(json.dumps({"multi_session": ms,
                           "flat_batch": res["flat_batch"],
                           "sharded": res["sharded"],
                           "memory": res["memory"],
-                          "fused_serving": res["fused_serving"]}, indent=2))
+                          "fused_serving": res["fused_serving"],
+                          "load": res["load"]}, indent=2))
         print(f"# wrote {out} "
               f"(with multi_session/flat_batch/sharded/memory/"
-              f"fused_serving)",
+              f"fused_serving/load)",
               flush=True)
         # acceptance gates (full config only — the 2-session smoke is too
         # small to amortize batching): batched serving must beat the
@@ -967,6 +972,32 @@ def main() -> None:
         if not fs["steady_tick_transfer_free"]:
             print("FAIL: steady-state fused serving tick performed a "
                   "host transfer")
+            sys.exit(1)
+        # multi-scene load gates (all session counts, smoke included):
+        # Zipf hit rate over the scene pager, steady mixed-scene sweep
+        # budget, overload shedding with bounded admitted-tail p95, and
+        # zero recompiles across scene churn after warmup
+        ld = res["load"]["gates"]
+        if not ld["hit_rate_met"]:
+            print(f"FAIL: scene-cache hit rate "
+                  f"{res['load']['scene_cache_hit_rate']:.2f} < 0.7 under "
+                  f"Zipf popularity")
+            sys.exit(1)
+        if not ld["steady_sweeps_met"]:
+            print(f"FAIL: steady mixed-scene tick sweeps exceed 2/tick")
+            sys.exit(1)
+        if not ld["shed_active"]:
+            print("FAIL: overload burst shed nothing (deadline policy "
+                  "inactive)")
+            sys.exit(1)
+        if not ld["overload_p95_met"]:
+            print(f"FAIL: overload p95 ratio "
+                  f"{ld['overload_p95_ratio']:.2f} > 3.0x uncontended "
+                  f"(tail latency collapsed instead of shedding)")
+            sys.exit(1)
+        if not ld["recompile_gate_met"]:
+            print(f"FAIL: scene churn recompiled "
+                  f"{ld['recompiles_after_warmup']} programs after warmup")
             sys.exit(1)
     if res["speedup"] < 1.0 and res["speedup_warm"] < 1.0:
         sys.exit(1)

@@ -161,4 +161,20 @@ if not fs["steady_tick_transfer_free"]:
     sys.exit("FAIL: steady-state fused serving tick performed a host "
              "transfer")
 PY
+
+echo "== multi-scene load smoke (<120 s budget) =="
+# Open-loop load harness, smoke arm: 2 scenes paged through a 2-slot
+# engine plus an overload burst with deadlines. benchmarks/load.py exits
+# nonzero itself when any gate fails (shed inactive, p95 collapse, scene
+# churn recompiles, steady sweeps > 2); the wall-clock budget is enforced
+# here. The Zipf-scale hit-rate statistics need the full 8-scene harness
+# (benchmarks/run.py --sessions 4), not this arm.
+start=$(date +%s)
+python benchmarks/load.py --smoke
+elapsed=$(( $(date +%s) - start ))
+echo "load smoke took ${elapsed}s"
+if (( elapsed > 120 )); then
+  echo "FAIL: load smoke exceeded the 120 s budget" >&2
+  exit 1
+fi
 echo "CI OK"

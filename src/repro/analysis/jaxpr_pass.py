@@ -1,10 +1,12 @@
 """jaxpr pass: trace the REAL jitted tick programs and verify their
 compile/transfer contracts without executing a single device step.
 
-A tiny (grid_res=16, res=16) streaming engine is constructed and its three
+A tiny (grid_res=16, res=16) streaming engine is constructed and its
 serving-path programs — ``_render_windows`` (staged tick),
-``_tick_streaming`` (fused steady tick) and ``_prime_select`` (admission
-priming) — are traced with ``jax.make_jaxpr`` on abstract
+``_tick_streaming`` (fused steady tick, traced both single-scene and over
+multi-scene paged params with a ``scene_of_seg`` steering map) and
+``_prime_select`` (admission priming) — are traced with
+``jax.make_jaxpr`` on abstract
 ``ShapeDtypeStruct`` inputs. ``make_jaxpr`` runs the Python trace only:
 the resulting jaxpr is exactly the program ``jax.jit`` would compile, and
 nothing is dispatched, so the transfer-freedom proof below is static.
@@ -187,6 +189,22 @@ def trace_serving_programs(root) -> Tuple[List[Finding], Dict[str, Any]]:
             _sds((s, n, 4, 4)), _sds((s, 4, 4)), _sds((s,), i32),
             _sds((s,), i32), _sds((s,), i32), bucket),
         rel(path), line)
+    # multi-scene variant: the serve engine pages K scene tables into a
+    # stacked device cache and steers segments with a traced scene_of_seg
+    # map — the SAME steady tick over those params must also be statically
+    # transfer-free (scene churn re-steers values, it never re-stages)
+    k = 2
+    ms_params = dict(aparams)
+    for key in ("table", "mv_table"):
+        a = ms_params[key]
+        ms_params[key] = _sds((k,) + tuple(a.shape), a.dtype)
+    ms_params["scene_of_seg"] = _sds((s,), i32)
+    programs["render_windows_streaming_multi_scene"] = (
+        jax.make_jaxpr(eng_f._tick_streaming, static_argnums=(9,))(
+            ms_params, _sds((s, h, w, 3)), _sds((s, h, w)), _sds((s, 4, 4)),
+            _sds((s, n, 4, 4)), _sds((s, 4, 4)), _sds((s,), i32),
+            _sds((s,), i32), _sds((s,), i32), bucket),
+        rel(path), line)
     path, line = _engine_anchor(eng._prime_select)
     programs["prime_reference_select"] = (
         jax.make_jaxpr(eng._prime_select)(
@@ -207,7 +225,9 @@ def trace_serving_programs(root) -> Tuple[List[Finding], Dict[str, Any]]:
                 for f in fs),
         }
     stats["steady_tick_transfer_free"] = (
-        stats["programs"]["render_windows_streaming"]["transfer_free"])
+        stats["programs"]["render_windows_streaming"]["transfer_free"]
+        and stats["programs"]["render_windows_streaming_multi_scene"][
+            "transfer_free"])
     return findings, stats
 
 

@@ -12,6 +12,7 @@ tests) so benchmarks and future passes can reuse the same instrumentation.
 """
 from __future__ import annotations
 
+import contextlib
 from typing import Dict
 
 _JIT_ATTRS = ("_windows_jit", "_tick_jit", "_prime_jit", "_prime_select_jit")
@@ -48,3 +49,19 @@ class JitCacheProbe:
 
     def recompiles(self) -> int:
         return sum(max(0, d) for d in self.delta().values())
+
+    @contextlib.contextmanager
+    def assert_no_new_compiles(self, what: str = "steady state"):
+        """Context manager asserting the wrapped work compiled NOTHING.
+
+        The multi-scene serving contract leans on this: rotating which
+        scenes occupy the device pages re-steers traced inputs
+        (scene_of_seg, page contents) and must never retrace.
+        """
+        self.reset()
+        yield self
+        if self.recompiles() != 0:
+            raise AssertionError(
+                f"{what} recompiled: {self.delta()} (expected zero new "
+                f"jit cache entries across "
+                f"{', '.join(sorted(self.baseline))})")

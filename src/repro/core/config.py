@@ -294,6 +294,15 @@ class RenderConfig:
     decoder: str = "direct"
     num_samples: int = 32
     stream_capacity: int = 512
+    # --- multi-scene serving ----------------------------------------------
+    # Byte budget of the device-resident per-scene table cache
+    # (RenderServeEngine's SceneCache): the LRU evicts unpinned scenes'
+    # pages once resident dense + MVoxel tables exceed it. 0 (default)
+    # disables the byte budget — residency is bounded only by the page
+    # count (num_slots). Budget changes never change compiled programs
+    # (the stacked table shape is static on num_slots), but the knob stays
+    # in the fingerprint: it shapes which uploads a benchmark run pays.
+    scene_cache_bytes: int = 0
 
     def __post_init__(self) -> None:
         if self.mode not in ("offtraj", "temporal"):
@@ -357,6 +366,10 @@ class RenderConfig:
                 "fused_tick=True does not support session sharding yet: "
                 "the cross-tick reference recurrence is not laid over the "
                 "device mesh (serve fused sessions unsharded)")
+        if self.scene_cache_bytes < 0:
+            raise ValueError(
+                f"scene_cache_bytes must be >= 0 (0 disables the byte "
+                f"budget), got {self.scene_cache_bytes}")
         if self.shard is not None and self.shard.enabled \
                 and self.num_slots % self.shard.num_devices != 0:
             raise ValueError(
@@ -449,10 +462,17 @@ class RenderRequest:
     engine's compaction capacity — enforced at submit with a ``ValueError``).
     ``priority``/``deadline_ms`` feed the serving engine's
     :class:`~repro.serve.policies.SchedulingPolicy`.
+
+    ``scene`` keys the session on ``(scene, session)``: a scene-aware
+    ``RenderServeEngine`` pages that scene's tables through its
+    device-resident SceneCache on admission (a cached scene uploads
+    nothing; a miss uploads exactly one re-laid table). ``None`` keeps
+    the engine's configured single scene — the pre-multi-scene path.
     """
 
     poses: Tuple[object, ...]  # [4,4] c2w pose per frame
     sid: Optional[int] = None
+    scene: Optional[str] = None
     window: Optional[int] = None
     hole_cap: Optional[int] = None
     pool_bucket: Optional[int] = None  # pin this session's pooled bucket
@@ -463,6 +483,11 @@ class RenderRequest:
         object.__setattr__(self, "poses", tuple(self.poses))
         if not self.poses:
             raise ValueError("RenderRequest needs at least one pose")
+        if self.scene is not None and (
+                not isinstance(self.scene, str) or not self.scene):
+            raise ValueError(
+                f"scene must be a non-empty scene name or None (engine's "
+                f"configured scene), got {self.scene!r}")
         if self.window is not None and self.window < 1:
             raise ValueError(f"window override must be >= 1, got {self.window}")
         if self.hole_cap is not None and self.hole_cap < 1:

@@ -69,6 +69,26 @@ from repro.nerf import rays
 from repro.utils import round_up
 
 
+def autotuned_best(config: RenderConfig) -> Optional[dict]:
+    """Cached autotune winners for this config's fingerprint, or None.
+
+    ``benchmarks/autotune.py`` sweeps RIT capacities and persists the
+    winners keyed by ``config.fingerprint()``; engine constructors consult
+    that cache opportunistically. The benchmarks package lives outside the
+    installed ``repro`` tree, so the lookup is best-effort: an absent
+    package, cache file, or fingerprint entry all mean "use the config
+    defaults" — never an error.
+    """
+    try:
+        from benchmarks.autotune import best_for
+    except Exception:
+        return None
+    try:
+        return best_for(config)
+    except Exception:
+        return None
+
+
 class WindowResult(NamedTuple):
     """Device-side output of one jitted warp-window render."""
 
@@ -169,6 +189,20 @@ class DeviceSparwEngine:
         # tests assert the jit cache size tracks it (and stays <= ladder)
         self.pool_buckets_used: set = set()
         self.num_window_calls = 0  # jitted window invocations (tests assert)
+        # --- autotuned overrides (benchmarks/autotune.py winners) ---------
+        # The sweep harness persists per-fingerprint winners; consume them
+        # here when present, else fall back to the config defaults. Only
+        # knobs that preserve the parity contract are applied: the fused
+        # tick's reference RIT capacity factor (every engine built from an
+        # equal config sees the same value, so exclusive-vs-batched runs
+        # stay aligned).
+        self.autotune = autotuned_best(config)
+        self.ref_cap_factor = 2
+        if self.autotune:
+            tuned = (self.autotune.get("fused_pipeline", {})
+                     .get("best", {}).get("ref_cap_factor"))
+            if tuned:
+                self.ref_cap_factor = int(tuned)
         self._windows_jit = jax.jit(self._render_windows,
                                     static_argnums=(7, 8))
         # --- unified streaming tick (fused ref→warp→hole-fill) ------------
@@ -566,7 +600,7 @@ class DeviceSparwEngine:
             rgb_ref=rgb_ref, dep_ref=dep_ref, ref_poses=ref_poses,
             tgt_poses=tgt_poses, next_ref_poses=next_ref_poses,
             win_lens=win_lens, caps=caps, pool_caps=pool_caps,
-            bucket=bucket,
+            bucket=bucket, ref_cap_factor=self.ref_cap_factor,
             dense_fill=lambda tp: self._dense_fill_flat(params, tp))
 
     def render_windows_streaming(self, rgb_ref: jnp.ndarray,

@@ -35,37 +35,20 @@ from repro.core.config import (  # noqa: F401 (RenderStats re-export)
     legacy_config,
 )
 from repro.core.engine import DeviceSparwEngine  # noqa: F401 (re-export)
+from repro.core.scene_cache import ParamsToken, SceneCache
 from repro.nerf import models, rays
 from repro.utils import psnr
 
 
-class _ParamsToken:
-    """Identity token for a params pytree, safe against ``id()`` recycling.
-
-    The old engine caches keyed on ``id(params)`` — after the original
-    params dict was garbage-collected, CPython could hand the same id to a
-    *different* params object and the cache would silently serve an engine
-    compiled for someone else's weights. The token closes that hole by
-    *keeping the keyed object alive* for as long as the cache entry exists
-    (so its id can never be recycled out from under the key); the LRU
-    bound on the cache keeps that pinning small and finite, which is the
-    weakref-safety property the cache needs without requiring the params
-    container itself to support weak references (plain dicts do not).
-    """
-
-    __slots__ = ("obj",)
-
-    def __init__(self, obj: object):
-        self.obj = obj
-
-    def __hash__(self) -> int:
-        return id(self.obj)
-
-    def __eq__(self, other: object) -> bool:
-        return isinstance(other, _ParamsToken) and other.obj is self.obj
+# The identity-token + LRU machinery generalized into the byte-budgeted
+# SceneCache (core/scene_cache.py) for multi-scene serving; the engine
+# caches below stay count-bounded specializations of it. ``_ParamsToken``
+# keys on object identity and keeps the keyed object alive, so a GC'd
+# params dict can never recycle its id() into someone else's engine.
+_ParamsToken = ParamsToken
 
 
-class _EngineLRU:
+class _EngineLRU(SceneCache):
     """Small least-recently-used cache for compiled engines.
 
     Long-lived servers render many distinct per-request override configs;
@@ -78,26 +61,11 @@ class _EngineLRU:
     """
 
     def __init__(self, maxsize: int = 16):
+        super().__init__(max_entries=maxsize)
         self.maxsize = maxsize
-        self._entries: "OrderedDict[tuple, object]" = OrderedDict()
-
-    def get(self, key: tuple) -> Optional[object]:
-        value = self._entries.get(key)
-        if value is not None:
-            self._entries.move_to_end(key)
-        return value
 
     def put(self, key: tuple, value: object) -> None:
-        self._entries[key] = value
-        self._entries.move_to_end(key)
-        while len(self._entries) > self.maxsize:
-            self._entries.popitem(last=False)
-
-    def __len__(self) -> int:
-        return len(self._entries)
-
-    def __contains__(self, key: tuple) -> bool:
-        return key in self._entries
+        super().put(key, value, nbytes=0)
 
 
 class CiceroRenderer:

@@ -158,6 +158,7 @@ def render_tick_streaming(model, params: dict, cam: rays.Camera, *,
                           next_ref_poses: jnp.ndarray,
                           win_lens: jnp.ndarray, caps: jnp.ndarray,
                           pool_caps: jnp.ndarray, bucket: int,
+                          ref_cap_factor: int = 2,
                           dense_fill=None) -> StreamingTickResult:
     """The unified streaming tick: warp → pooled compaction → ONE fused
     Pallas gather serving BOTH the tick's hole fill and the NEXT tick's
@@ -205,11 +206,25 @@ def render_tick_streaming(model, params: dict, cam: rays.Camera, *,
                                         c.near, c.far, ns, None)
     pts_r, t_r = rays.sample_along_rays(ref_batch.origins, ref_batch.dirs,
                                         c.near, c.far, ns, None)
-    feats_h, feats_r = streaming_pipeline.gather_features_tick(
-        params["table"], params["mv_table"], model.streaming_cfg,
-        pts_h.reshape(-1, 3), jnp.repeat(hole_batch.seg, ns),
-        pts_r.reshape(-1, 3), jnp.repeat(ref_batch.seg, ns),
-        num_seg=s, interpret=c.pallas_interpret)
+    scene_of_seg = params.get("scene_of_seg")
+    if scene_of_seg is not None:
+        # mixed-scene slot batch: every segment gathers from its own
+        # scene's page of the stacked resident set (traced map — scene
+        # churn re-steers this program without recompiling)
+        feats_h, feats_r = streaming_pipeline.gather_features_tick_scenes(
+            params["table"], params["mv_table"], scene_of_seg,
+            model.streaming_cfg,
+            pts_h.reshape(-1, 3), jnp.repeat(hole_batch.seg, ns),
+            pts_r.reshape(-1, 3), jnp.repeat(ref_batch.seg, ns),
+            num_seg=s, ref_cap_factor=ref_cap_factor,
+            interpret=c.pallas_interpret)
+    else:
+        feats_h, feats_r = streaming_pipeline.gather_features_tick(
+            params["table"], params["mv_table"], model.streaming_cfg,
+            pts_h.reshape(-1, 3), jnp.repeat(hole_batch.seg, ns),
+            pts_r.reshape(-1, 3), jnp.repeat(ref_batch.seg, ns),
+            num_seg=s, ref_cap_factor=ref_cap_factor,
+            interpret=c.pallas_interpret)
     sig_h, rgb_h = model.decode_features(
         params, feats_h, jnp.repeat(hole_batch.dirs, ns, axis=0))
     sig_r, rgb_r = model.decode_features(

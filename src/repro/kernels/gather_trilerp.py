@@ -110,6 +110,52 @@ def gather_trilerp_mvoxels_segmented(mv_table: jnp.ndarray, ids: jnp.ndarray,
     return out.reshape(num_seg * num_mv, cap, c)
 
 
+def _kernel_per_seg(tbl_ref, ids_ref, w_ref, out_ref):
+    out_ref[0, 0] = gather_block(tbl_ref[0, 0], ids_ref[0, 0], w_ref[0, 0],
+                                 out_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("num_seg", "interpret"))
+def gather_trilerp_mvoxels_per_seg(mv_tables: jnp.ndarray, ids: jnp.ndarray,
+                                   weights: jnp.ndarray, *, num_seg: int,
+                                   interpret: bool | None = None
+                                   ) -> jnp.ndarray:
+    """Mixed-scene GU entry point: every segment brings its OWN halo table.
+
+    ``mv_tables`` is ``[num_seg, num_mv, P, C]`` — segment ``s``'s rows are
+    its scene's re-laid MVoxel table (gathered from the stacked resident
+    set by the caller via the traced segment→scene map). The grid and the
+    per-(segment, MVoxel) RIT blocks match
+    :func:`gather_trilerp_mvoxels_segmented` exactly; only the table
+    BlockSpec walks the leading scene-selected axis, so the staged block
+    for grid step ``(m, s)`` holds the same rows segment ``s``'s exclusive
+    single-scene run would stage — :func:`gather_block` then computes
+    bit-identical outputs. Segments sharing a scene should be adjacent
+    (the serve engine sorts slots scene-major) so consecutive inner steps
+    reuse the staged block: one pass over the *distinct* resident tables
+    per tick, Potamoi's singular-sweep property for mixed batches.
+    """
+    interpret = resolve_interpret(interpret)
+    _, num_mv, p, c = mv_tables.shape
+    cap = ids.shape[1]
+    ids4 = ids.reshape(num_seg, num_mv, cap, 8)
+    w4 = weights.reshape(num_seg, num_mv, cap, 8)
+    out = pl.pallas_call(
+        _kernel_per_seg,
+        grid=(num_mv, num_seg),  # seg innermost: scene-adjacent reuse
+        in_specs=[
+            pl.BlockSpec((1, 1, p, c), lambda m, s: (s, m, 0, 0)),
+            pl.BlockSpec((1, 1, cap, 8), lambda m, s: (s, m, 0, 0)),
+            pl.BlockSpec((1, 1, cap, 8), lambda m, s: (s, m, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, cap, c), lambda m, s: (s, m, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((num_seg, num_mv, cap, c),
+                                       mv_tables.dtype),
+        interpret=interpret,
+    )(mv_tables, ids4, w4)
+    return out.reshape(num_seg * num_mv, cap, c)
+
+
 def gather_trilerp_mvoxels(mv_table: jnp.ndarray, ids: jnp.ndarray,
                            weights: jnp.ndarray, *,
                            interpret: bool | None = None) -> jnp.ndarray:

@@ -29,6 +29,7 @@ def gather_features_streaming(table: jnp.ndarray, points: jnp.ndarray,
                               mv_table: jnp.ndarray | None = None,
                               seg: jnp.ndarray | None = None,
                               num_seg: int = 1,
+                              scene_of_seg: jnp.ndarray | None = None,
                               interpret: bool | None = None) -> jnp.ndarray:
     """Memory-centric feature gather of ``points`` from a dense vertex table.
 
@@ -49,14 +50,28 @@ def gather_features_streaming(table: jnp.ndarray, points: jnp.ndarray,
     overflow-fallback set) its exclusive single-session run would have.
     Samples with ``seg >= num_seg`` (chunk padding) are dropped from the
     table — they consume no capacity and their output is unspecified.
+
+    ``scene_of_seg`` ([num_seg] int32, requires ``seg``) switches to the
+    mixed-scene path: ``table`` is the stacked resident set ``[K, res^3,
+    C]``, ``mv_table`` the stacked re-laid set ``[K, num_mv, P, C]``, and
+    each segment gathers from its own scene's rows (bit-identical per
+    segment to its exclusive single-scene run — the kernel body and the
+    fallback einsum are unchanged).
     """
+    scened = scene_of_seg is not None
+    if scened and seg is None:
+        raise ValueError("scene_of_seg requires the seg array (the segment"
+                         "→scene map is indexed by segment id)")
     s = points.shape[0]
     c = table.shape[-1]
     if mv_table is None:
+        if scened:
+            raise ValueError("mixed-scene gather needs the prebuilt stacked "
+                             "mv_table [K, num_mv, P, C]")
         mv_table = streaming.build_mvoxel_table(table, cfg)  # [M, P, C]
     mv = streaming.mvoxel_ids(points, cfg)
     num_mv = cfg.num_mvoxels
-    if seg is not None and num_seg > 1:
+    if seg is not None and (num_seg > 1 or scened):
         # combined (segment, mvoxel) bucket id, segment-major; padding
         # segments land out of range and drop out of the table build
         bucket = jnp.where(seg < num_seg, seg * num_mv + mv,
@@ -75,7 +90,11 @@ def gather_features_streaming(table: jnp.ndarray, points: jnp.ndarray,
     ids_mv = jnp.where(valid[..., None], local_ids[sample_slot], 0)
     w_mv = jnp.where(valid[..., None], w[sample_slot], 0.0)
 
-    if seg is not None and num_seg > 1:
+    if scened:
+        seg_tables = mv_table[scene_of_seg]  # [num_seg, num_mv, P, C]
+        out_mv = _gt.gather_trilerp_mvoxels_per_seg(
+            seg_tables, ids_mv, w_mv, num_seg=num_seg, interpret=interpret)
+    elif seg is not None and num_seg > 1:
         out_mv = _gt.gather_trilerp_mvoxels_segmented(
             mv_table, ids_mv, w_mv, num_seg=num_seg, interpret=interpret)
     else:
@@ -90,7 +109,13 @@ def gather_features_streaming(table: jnp.ndarray, points: jnp.ndarray,
 
     # overflow fallback (pixel-centric path for the spilled samples)
     gids, gw = grids.corner_ids_weights(points, cfg.grid_res)
-    fallback = grids.gather_trilerp_ref(table, gids, gw)
+    if scened:
+        from repro.kernels import streaming_pipeline as _sp
+
+        scn = scene_of_seg[jnp.clip(seg, 0, num_seg - 1)]
+        fallback = _sp.gather_trilerp_ref_scened(table, scn, gids, gw)
+    else:
+        fallback = grids.gather_trilerp_ref(table, gids, gw)
     return jnp.where(rit.overflow[:, None], fallback, feats)
 
 

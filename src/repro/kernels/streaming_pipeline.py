@@ -103,6 +103,64 @@ def fused_gather_dual(mv_table: jnp.ndarray,
             out_r.reshape(num_seg * num_mv, cap_r, c))
 
 
+def _fused_kernel_per_seg(tbl_ref, ih_ref, wh_ref, ir_ref, wr_ref,
+                          oh_ref, or_ref):
+    """Mixed-scene fused stage: identical math to ``_fused_kernel``, but
+    the staged halo block is the current *segment's scene's* block."""
+    tbl = tbl_ref[0, 0]  # [P, C] — this segment's scene, staged once
+    oh_ref[0, 0] = _gt.gather_block(tbl, ih_ref[0, 0], wh_ref[0, 0],
+                                    oh_ref.dtype)
+    or_ref[0, 0] = _gt.gather_block(tbl, ir_ref[0, 0], wr_ref[0, 0],
+                                    or_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("num_seg", "interpret"))
+def fused_gather_dual_per_seg(mv_tables: jnp.ndarray,
+                              ids_h: jnp.ndarray, w_h: jnp.ndarray,
+                              ids_r: jnp.ndarray, w_r: jnp.ndarray, *,
+                              num_seg: int, interpret: bool | None = None
+                              ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Mixed-scene variant of :func:`fused_gather_dual`: segment ``s``
+    gathers from its own scene's halo table ``mv_tables[s]``
+    (``[num_seg, num_mv, P, C]``, scene-selected by the caller from the
+    stacked resident set). Grid, RIT blocks, and the inner
+    ``gather_block`` math are unchanged, so a segment's outputs are
+    bit-identical to its exclusive single-scene run; segments sharing a
+    scene stage identical blocks, and with scene-adjacent slot ordering
+    the tick still fetches each *distinct* resident block once."""
+    interpret = resolve_interpret(interpret)
+    _, num_mv, p, c = mv_tables.shape
+    cap_h, cap_r = ids_h.shape[1], ids_r.shape[1]
+    ih4 = ids_h.reshape(num_seg, num_mv, cap_h, 8)
+    wh4 = w_h.reshape(num_seg, num_mv, cap_h, 8)
+    ir4 = ids_r.reshape(num_seg, num_mv, cap_r, 8)
+    wr4 = w_r.reshape(num_seg, num_mv, cap_r, 8)
+    out_h, out_r = pl.pallas_call(
+        _fused_kernel_per_seg,
+        grid=(num_mv, num_seg),  # seg innermost: scene-adjacent block reuse
+        in_specs=[
+            pl.BlockSpec((1, 1, p, c), lambda m, s: (s, m, 0, 0)),
+            pl.BlockSpec((1, 1, cap_h, 8), lambda m, s: (s, m, 0, 0)),
+            pl.BlockSpec((1, 1, cap_h, 8), lambda m, s: (s, m, 0, 0)),
+            pl.BlockSpec((1, 1, cap_r, 8), lambda m, s: (s, m, 0, 0)),
+            pl.BlockSpec((1, 1, cap_r, 8), lambda m, s: (s, m, 0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, 1, cap_h, c), lambda m, s: (s, m, 0, 0)),
+            pl.BlockSpec((1, 1, cap_r, c), lambda m, s: (s, m, 0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((num_seg, num_mv, cap_h, c),
+                                 mv_tables.dtype),
+            jax.ShapeDtypeStruct((num_seg, num_mv, cap_r, c),
+                                 mv_tables.dtype),
+        ],
+        interpret=interpret,
+    )(mv_tables, ih4, wh4, ir4, wr4)
+    return (out_h.reshape(num_seg * num_mv, cap_h, c),
+            out_r.reshape(num_seg * num_mv, cap_r, c))
+
+
 class _RitBlocks(NamedTuple):
     ids_mv: jnp.ndarray   # [num_slots, cap, 8] — layout-remapped local ids
     w_mv: jnp.ndarray     # [num_slots, cap, 8]
@@ -144,6 +202,72 @@ def _scatter_with_fallback(out_mv: jnp.ndarray, blocks: _RitBlocks,
     gids, gw = grids.corner_ids_weights(points, cfg.grid_res)
     fallback = grids.gather_trilerp_ref(table, gids, gw)
     return jnp.where(blocks.overflow[:, None], fallback, feats)
+
+
+def gather_trilerp_ref_scened(tables: jnp.ndarray, scene: jnp.ndarray,
+                              ids: jnp.ndarray, weights: jnp.ndarray
+                              ) -> jnp.ndarray:
+    """Per-sample-scene reference gather over stacked dense tables
+    ``[K, res^3, C]``: the same rows and the same einsum as
+    ``grids.gather_trilerp_ref`` on the sample's own scene's table, so a
+    single-scene slice of the output is bit-identical to the exclusive
+    reference gather."""
+    feats = tables[scene[:, None], ids]  # [S, 8, C]
+    return jnp.einsum("svc,sv->sc", feats, weights)
+
+
+def _scatter_with_fallback_scened(out_mv: jnp.ndarray, blocks: _RitBlocks,
+                                  tables: jnp.ndarray, scene: jnp.ndarray,
+                                  points: jnp.ndarray,
+                                  cfg: streaming.StreamingCfg) -> jnp.ndarray:
+    """Mixed-scene :func:`_scatter_with_fallback`: the overflow fallback
+    reads each sample's own scene's ORIGINAL dense table."""
+    t = points.shape[0]
+    c = out_mv.shape[-1]
+    valid = blocks.samples >= 0
+    flat_sample = jnp.where(valid, blocks.samples, t).reshape(-1)
+    feats = jnp.zeros((t + 1, c), tables.dtype).at[flat_sample].set(
+        out_mv.reshape(-1, c))
+    feats = feats[:t]
+    gids, gw = grids.corner_ids_weights(points, cfg.grid_res)
+    fallback = gather_trilerp_ref_scened(tables, scene, gids, gw)
+    return jnp.where(blocks.overflow[:, None], fallback, feats)
+
+
+def gather_features_tick_scenes(tables: jnp.ndarray, mv_tables: jnp.ndarray,
+                                scene_of_seg: jnp.ndarray,
+                                cfg: streaming.StreamingCfg,
+                                pts_hole: jnp.ndarray, seg_hole: jnp.ndarray,
+                                pts_ref: jnp.ndarray, seg_ref: jnp.ndarray, *,
+                                num_seg: int, ref_cap_factor: int = 2,
+                                interpret: bool | None = None
+                                ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Mixed-scene :func:`gather_features_tick`: one fused sweep over the
+    *resident scene set*.
+
+    ``tables`` ``[K, res^3, C]`` / ``mv_tables`` ``[K, num_mv, P, C]`` are
+    the K device-resident scene pages (K static = the engine's page
+    count); ``scene_of_seg`` ``[num_seg] int32`` is the traced segment→
+    page map, so scene-set churn re-steers the gather without recompiling.
+    RIT bucketing stays per ``(segment, MVoxel)`` — capacity isolation is
+    already per segment — and each segment's gather + overflow fallback
+    read only its own scene's rows, which keeps every segment bit-
+    identical to its exclusive single-scene run."""
+    cfg_ref = dataclasses.replace(
+        cfg, capacity=cfg.capacity * ref_cap_factor)
+    bh = _rit_blocks(pts_hole, seg_hole, num_seg, cfg)
+    br = _rit_blocks(pts_ref, seg_ref, num_seg, cfg_ref)
+    seg_tables = mv_tables[scene_of_seg]  # [num_seg, num_mv, P, C]
+    out_h, out_r = fused_gather_dual_per_seg(
+        seg_tables, bh.ids_mv, bh.w_mv, br.ids_mv, br.w_mv,
+        num_seg=num_seg, interpret=interpret)
+    scn_h = scene_of_seg[jnp.clip(seg_hole, 0, num_seg - 1)]
+    scn_r = scene_of_seg[jnp.clip(seg_ref, 0, num_seg - 1)]
+    feats_h = _scatter_with_fallback_scened(out_h, bh, tables, scn_h,
+                                            pts_hole, cfg)
+    feats_r = _scatter_with_fallback_scened(out_r, br, tables, scn_r,
+                                            pts_ref, cfg)
+    return feats_h, feats_r
 
 
 def gather_features_tick(table: jnp.ndarray, mv_table: jnp.ndarray,

@@ -101,9 +101,15 @@ class NerfModel:
         self.scene = scene
         self._render_rays_jit: Optional[callable] = None
         self._render_rays_flat_jit: Optional[callable] = None
-        # (feature table, its prebuilt MVoxel halo table) — the key is held
-        # so an `is` hit can never alias a recycled object
-        self._mv_table_cache: Optional[tuple] = None
+        # feature-table identity → prebuilt MVoxel halo table. An LRU (not
+        # a single slot): one model serving alternating scenes (A, B, A,
+        # B, ...) must rebuild ZERO tables once both are resident — the
+        # single-slot cache silently thrashed on exactly that pattern.
+        # Keys hold the table object, so an `is` hit can never alias a
+        # recycled id.
+        from repro.core.scene_cache import SceneCache as _SceneCache
+
+        self._mv_table_cache = _SceneCache(max_entries=8)
 
     # ------------------------------------------------------------------
     def init(self, key: jax.Array) -> dict:
@@ -154,17 +160,26 @@ class NerfModel:
 
         scfg = self.streaming_cfg
         if "mv_table" in params:
+            if params["mv_table"].ndim == 4:
+                # stacked multi-scene resident set [K, num_mv, P, C] — the
+                # serve engine's SceneCache built and owns these pages
+                return params
             if params["mv_table"].shape[1] == scfg.halo_rows:
                 return params
             # staged under a different mvoxel_layout (row count differs) —
             # a stale table would make every layout-remapped id miss;
             # rebuild from the raw feature table instead of trusting it
             params = {k: v for k, v in params.items() if k != "mv_table"}
+        from repro.core.scene_cache import ParamsToken as _Token
+
         table = params["table"]
-        if self._mv_table_cache is None or self._mv_table_cache[0] is not table:
-            self._mv_table_cache = (table, _streaming.build_mvoxel_table(
-                table, self.streaming_cfg))  # keep one entry
-        return {**params, "mv_table": self._mv_table_cache[1]}
+        # keyed on (table identity, streaming geometry): a layout change
+        # (halo row count differs) must rebuild, never serve a stale shape
+        mv_table = self._mv_table_cache.get_or_build(
+            (_Token(table), scfg),
+            lambda: ((built := _streaming.build_mvoxel_table(
+                table, scfg)), built.nbytes))
+        return {**params, "mv_table": mv_table}
 
     def query_features(self, params: dict, points: jnp.ndarray,
                        backend: Optional[str] = None,
@@ -174,16 +189,26 @@ class NerfModel:
         (one segment per serving session): the streaming gather buckets its
         RIT per (segment, MVoxel), so a fused cross-session batch keeps
         exclusive-run capacity semantics. Ignored by reference paths (their
-        gathers are per-sample — segment-oblivious by construction)."""
+        gathers are per-sample — segment-oblivious by construction).
+
+        Mixed-scene serving rides the same call: when ``params`` carry the
+        stacked resident set (``table`` ``[K, res^3, C]`` + ``mv_table``
+        ``[K, num_mv, P, C]`` + traced ``scene_of_seg`` ``[num_seg]``),
+        each segment gathers from its own scene's rows."""
         c = self.cfg
         backend = backend or c.backend
         if backend == "streaming" and c.kind == "dvgo":
             from repro.kernels import ops
 
+            scene_of_seg = params.get("scene_of_seg")
+            if scene_of_seg is not None and seg is None:
+                raise ValueError(
+                    "multi-scene params (scene_of_seg present) need the "
+                    "segment axis: render through the flat ray-batch core")
             return ops.gather_features_streaming(
                 params["table"], points, self.streaming_cfg,
                 mv_table=params.get("mv_table"), seg=seg, num_seg=num_seg,
-                interpret=c.pallas_interpret)
+                scene_of_seg=scene_of_seg, interpret=c.pallas_interpret)
         # hash / factorized representations have no dense vertex walk — they
         # stay on the reference path (the paper's NGP level-fallback)
         if c.kind == "dvgo":

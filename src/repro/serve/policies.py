@@ -19,6 +19,16 @@ economics (one reference render amortized over ``window`` targets) make
 the window the natural preemption quantum, and a drained slot is the only
 point where the batch membership changes anyway (the device program is
 compiled once for the engine's lifetime).
+
+Overload shedding is the second (optional) policy surface: before each
+admission pass the engine asks :meth:`SchedulingPolicy.shed` which queued
+sessions to *drop* instead of serve. Shedding only ever touches the
+queue — in-slot sessions always finish — so an overloaded engine keeps
+its admitted tail latency bounded instead of letting every queued
+session's wait (and the run's p95) grow without limit. ``FifoPolicy``
+sheds nothing (the historical behavior, bit-parity preserved);
+``PriorityPolicy`` sheds sessions whose deadline already expired while
+queued (they could only render late frames nobody can use).
 """
 from __future__ import annotations
 
@@ -39,6 +49,13 @@ class SchedulingPolicy(Protocol):
         objects (each carries ``priority``, ``deadline_ms``, ``arrival``
         and ``submitted_s``); ``now_s`` is the engine's current wall
         clock, so deadline policies can rank by *remaining* budget.
+
+        Policies may ADDITIONALLY implement
+        ``shed(queue, now_s) -> Sequence[int]`` — indices of queued
+        sessions to drop before this tick's admission pass. ``shed`` is
+        deliberately not part of the structural protocol (pre-existing
+        policy objects stay valid); the engine treats a missing ``shed``
+        as "shed nothing".
         """
         ...
 
@@ -50,6 +67,9 @@ class FifoPolicy:
 
     def select(self, queue: Sequence[object], now_s: float) -> int:
         return 0
+
+    def shed(self, queue: Sequence[object], now_s: float) -> Sequence[int]:
+        return ()
 
 
 class PriorityPolicy:
@@ -76,6 +96,13 @@ class PriorityPolicy:
             key=lambda i: (-getattr(queue[i], "priority", 0),
                            self._remaining_s(queue[i], now_s),
                            getattr(queue[i], "arrival", i)))
+
+    def shed(self, queue: Sequence[object], now_s: float) -> Sequence[int]:
+        """Drop queued sessions whose deadline expired while waiting —
+        serving them now could only produce frames past their useful
+        lifetime, at the cost of delaying every session behind them."""
+        return [i for i, sess in enumerate(queue)
+                if self._remaining_s(sess, now_s) < 0.0]
 
 
 def resolve_policy(policy: Union[None, str, SchedulingPolicy]

@@ -55,18 +55,34 @@ Contracts inherited from the device engine:
 Per-session reference poses are extrapolated with
 :class:`~repro.core.schedule.RefPoseExtrapolator` — the streamed form of
 the offtraj schedule, bit-identical to the batch planner.
+
+**Multi-scene serving** (``scene_loader=...``) keys sessions on
+``(scene, session)``: each slot's occupant may view a *different* scene,
+and the engine pages per-scene MVoxel tables through a device-resident
+LRU (:class:`~repro.core.scene_cache.SceneCache`) with
+``RenderConfig.scene_cache_bytes`` as the byte budget. The resident set
+is a stacked ``[K, ...]`` pair of device arrays (``K = num_slots``
+pages); admission of a cached scene uploads nothing, a miss uploads
+exactly one dense table (its halo re-layout is built on device) into the
+LRU-evicted page. Ticks stay ONE compiled program across scene-set
+churn: the stacked shapes are static in ``K``, and the slot→page map
+rides in as a traced ``scene_of_seg`` array (re-staged, like the
+win_lens/caps signature, only when slot composition changes — a
+steady-state mixed-scene tick is still transfer-free). Live slots pin
+their scene's page, so an occupant's table can never be stolen
+mid-trajectory.
 """
 from __future__ import annotations
 
 import time
 from dataclasses import dataclass, field
-from typing import Dict, List, Optional, Tuple, Union
+from typing import Callable, Dict, List, Optional, Tuple, Union
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import schedule
+from repro.core import schedule, streaming
 from repro.core.config import (
     _UNSET,
     HoleCapController,
@@ -76,6 +92,7 @@ from repro.core.config import (
     legacy_config,
 )
 from repro.core.engine import DeviceSparwEngine
+from repro.core.scene_cache import SceneCache
 from repro.kernels import streaming_pipeline
 from repro.nerf import rays
 from repro.serve.policies import SchedulingPolicy, resolve_policy
@@ -87,8 +104,12 @@ class RenderSession:
 
     ``window``/``hole_cap`` are per-session overrides of the engine config
     (both bounded by the engine's static capacity — validated at submit);
-    ``priority``/``deadline_ms`` feed the admission policy. ``arrival`` and
-    ``submitted_s`` are stamped by :meth:`RenderServeEngine.submit`.
+    ``priority``/``deadline_ms`` feed the admission policy. ``scene``
+    names which scene this client views (None = the engine's default
+    params; non-None requires a multi-scene engine). ``arrival`` and
+    ``submitted_s`` are stamped by :meth:`RenderServeEngine.submit`,
+    ``admitted_s`` when the session takes a slot; ``shed=True`` marks a
+    session the policy dropped from the queue (done without frames).
     """
 
     sid: int
@@ -102,8 +123,11 @@ class RenderSession:
     pool_bucket: Optional[int] = None  # fixed pool-bucket override (pow2)
     priority: int = 0
     deadline_ms: Optional[float] = None
+    scene: Optional[str] = None       # (scene, session) serving key
     arrival: int = -1                 # submission order (policy tie-break)
     submitted_s: Optional[float] = None
+    admitted_s: Optional[float] = None
+    shed: bool = False
 
     def __post_init__(self) -> None:
         if not self.poses:
@@ -118,7 +142,8 @@ class RenderSession:
                    hole_cap=request.hole_cap,
                    pool_bucket=request.pool_bucket,
                    priority=request.priority,
-                   deadline_ms=request.deadline_ms)
+                   deadline_ms=request.deadline_ms,
+                   scene=request.scene)
 
 
 @dataclass
@@ -139,6 +164,10 @@ class _Slot:
     # prime-on-admit, then advanced every tick by the fused sweep's
     # co-render (the next window's extrapolated pose)
     ref_pose: Optional[jnp.ndarray] = None
+    # multi-scene: the occupant's scene key and its device page — the key
+    # pins the page in the SceneCache while this slot is occupied
+    scene_key: Optional[str] = None
+    page: int = 0
 
 
 class RenderServeEngine:
@@ -170,7 +199,8 @@ class RenderServeEngine:
                  num_slots=_UNSET, window=_UNSET, phi_deg=_UNSET,
                  hole_cap=_UNSET, ray_chunk=_UNSET, *,
                  config: Optional[RenderConfig] = None,
-                 policy: Union[None, str, SchedulingPolicy] = None):
+                 policy: Union[None, str, SchedulingPolicy] = None,
+                 scene_loader: Optional[Callable[[str], object]] = None):
         config = legacy_config(
             "RenderServeEngine", cam, config, self._LEGACY_DEFAULTS,
             dict(num_slots=num_slots, window=window, phi_deg=phi_deg,
@@ -184,6 +214,38 @@ class RenderServeEngine:
         self.queue: List[RenderSession] = []
         self.num_ticks = 0
         self._num_submitted = 0  # arrival stamp for policy tie-breaking
+        self._num_shed = 0       # sessions the policy dropped from the queue
+        # per-tick telemetry (lifetime logs; run() reports per-run slices)
+        self._queue_depth_log: List[int] = []
+        self._occupancy_log: List[int] = []
+        # --- multi-scene paging (scene_loader) ----------------------------
+        # scene name -> device page index, LRU under the byte budget; the
+        # stacked [K, ...] arrays ARE the page storage (K = num_slots)
+        self.scene_loader = scene_loader
+        self.multi_scene = scene_loader is not None
+        if self.multi_scene:
+            if not self.engine._seg_aware:
+                raise ValueError(
+                    "multi-scene serving needs the segment-aware streaming "
+                    "backend (backend='streaming' with a grid model): the "
+                    "scene->segment map rides the flat batch's seg axis")
+            base = dict(self.engine.params)
+            self._default_table = base.pop("table")
+            self._default_mv = base.pop("mv_table")
+            self._base_params = base  # decoder etc. — shared across scenes
+            k = self.num_slots
+            self._table_stack = jnp.zeros(
+                (k,) + self._default_table.shape, self._default_table.dtype)
+            self._mv_stack = jnp.zeros(
+                (k,) + self._default_mv.shape, self._default_mv.dtype)
+            self._free_pages = list(range(k))[::-1]  # pop() yields page 0 first
+            self.scene_cache = SceneCache(
+                budget_bytes=config.scene_cache_bytes, max_entries=k)
+            self._num_uploads = 0
+            self._uploaded_bytes = 0
+            # staged slot->page map (re-uploaded only when it changes)
+            self._scene_sig: Optional[Tuple[int, ...]] = None
+            self._scene_of_seg = jnp.zeros((k,), jnp.int32)
         # idle slots render a degenerate self-warp (ref == tgt ⇒ zero holes,
         # can never trigger the dense fallback); built once so a tick never
         # transfers a fresh constant to the device
@@ -259,6 +321,82 @@ class RenderServeEngine:
                 | {slot.session.sid for slot in self.slots
                    if slot is not None})
 
+    # ------------------------------------------------------------------
+    # multi-scene paging
+    # ------------------------------------------------------------------
+    def _pinned_scenes(self) -> set:
+        """Scene keys whose pages live slots hold — never evictable."""
+        return {slot.scene_key for slot in self.slots if slot is not None}
+
+    def _page_of(self, skey: Optional[str], pinned: set) -> int:
+        """Resolve ``skey`` to its device page, paging it in on a miss.
+
+        Hit: the scene is already resident — NOTHING is uploaded, the
+        admission costs one dict lookup. Miss: the LRU cold (non-pinned)
+        scene's page is recycled and exactly one dense table is uploaded
+        into it (the halo re-layout is built on device from that upload);
+        byte-budget pressure (``scene_cache_bytes``) may free further
+        cold pages at the same point.
+        """
+        page = self.scene_cache.get(skey)
+        if page is not None:
+            return page
+        if not self._free_pages:
+            # claim a page before building: insert a placeholder so the
+            # cache's own LRU/pin logic picks the victim, then recycle
+            # the victim's page for this scene
+            for _k, freed in self.scene_cache.put(skey, -1, 0, pinned=pinned):
+                if freed >= 0:
+                    self._free_pages.append(freed)
+            if not self._free_pages:
+                raise RuntimeError(
+                    "scene cache exhausted: every page is pinned by a live "
+                    "slot (more distinct scenes in flight than num_slots "
+                    "pages — should be unreachable, slots == pages)")
+        page = self._free_pages.pop()
+        if skey is None:
+            table, mv = self._default_table, self._default_mv
+        else:
+            loaded = self.scene_loader(skey)
+            table = loaded["table"] if isinstance(loaded, dict) else loaded
+            table = jnp.asarray(table, self._default_table.dtype)
+            if table.shape != self._default_table.shape:
+                raise ValueError(
+                    f"scene {skey!r}: table shape {table.shape} differs "
+                    f"from the engine's compiled page shape "
+                    f"{self._default_table.shape} (all scenes share one "
+                    f"grid geometry)")
+            mv = streaming.build_mvoxel_table(
+                table, self.engine.model.streaming_cfg)
+        self._table_stack = self._table_stack.at[page].set(table)
+        self._mv_stack = self._mv_stack.at[page].set(mv)
+        nbytes = int(table.nbytes) + int(mv.nbytes)
+        self._num_uploads += 1
+        self._uploaded_bytes += nbytes
+        for _k, freed in self.scene_cache.put(skey, page, nbytes,
+                                              pinned=pinned):
+            if freed >= 0:
+                self._free_pages.append(freed)
+        return page
+
+    def _stage_scene_map(self) -> None:
+        """Refresh the staged slot→page device array iff the mapping
+        changed (admit/drain/repage), then point the device engine at the
+        current stacked params. A steady-state mixed-scene tick re-stages
+        nothing — the scene_of_seg transfer happens only on composition
+        changes, exactly like the win_lens/caps signature."""
+        sig = tuple(slot.page if slot is not None else 0
+                    for slot in self.slots)
+        if sig != self._scene_sig:
+            self._scene_sig = sig
+            self._scene_of_seg = jnp.asarray(sig, jnp.int32)
+        # dict rebuild is host-only (the arrays are already device-resident);
+        # the stacked shapes are static, so this is ONE compile for the
+        # engine lifetime no matter which scenes rotate through the pages
+        self.engine.params = dict(
+            self._base_params, table=self._table_stack,
+            mv_table=self._mv_stack, scene_of_seg=self._scene_of_seg)
+
     def submit(self, sessions: List[RenderSession]) -> None:
         """Queue sessions for admission. The WHOLE batch is validated
         before any engine or session state changes: a rejected batch
@@ -273,6 +411,11 @@ class RenderServeEngine:
         batch_sids = set()
         for sess in sessions:
             self._effective(sess)  # fail fast on impossible overrides
+            if sess.scene is not None and not self.multi_scene:
+                raise ValueError(
+                    f"session {sess.sid}: scene={sess.scene!r} but the "
+                    f"engine has no scene_loader (construct with "
+                    f"scene_loader=... for multi-scene serving)")
             if sess.sid in live or sess.sid in batch_sids:
                 raise ValueError(
                     f"session sid {sess.sid} duplicates a live session "
@@ -295,10 +438,22 @@ class RenderServeEngine:
         the admission tick primes it into the recurrence before the
         fused sweep warps it."""
         now = time.time()
+        shed_fn = getattr(self.policy, "shed", None)
+        if shed_fn is not None and self.queue:
+            # overload shedding: drop queued sessions the policy declares
+            # unservable (e.g. deadline already blown) BEFORE they take a
+            # slot — the engine degrades by serving fewer sessions well,
+            # not every session late
+            for i in sorted(shed_fn(self.queue, now), reverse=True):
+                sess = self.queue.pop(i)
+                sess.shed = True
+                sess.done = True
+                self._num_shed += 1
         newly: List[int] = []
         for s in range(self.num_slots):
             if self.slots[s] is None and self.queue:
                 sess = self.queue.pop(self.policy.select(self.queue, now))
+                sess.admitted_s = now
                 win, cap = self._effective(sess)
                 cfg = self.engine.config
                 ctl_kw = dict(worst=win * cap,
@@ -313,6 +468,13 @@ class RenderServeEngine:
                     extrapolator=schedule.RefPoseExtrapolator(window=win),
                     ctl=HoleCapController(**ctl_kw),
                     ctl_c=HoleCapController(**ctl_kw))
+                if self.multi_scene:
+                    # page the session's scene in now (upload-on-miss);
+                    # already-occupied slots pin their pages so admission
+                    # can never steal a live scene
+                    slot.scene_key = sess.scene
+                    slot.page = self._page_of(sess.scene,
+                                              self._pinned_scenes())
                 if self.fused:
                     slot.ref_pose = slot.extrapolator.next_reference(
                         sess.poses[:win])
@@ -410,9 +572,16 @@ class RenderServeEngine:
         hole-free), so a freed slot's recurrence is self-consistent until
         prime-on-admit overwrites it for the next occupant."""
         newly = self._admit()
-        if not any(s is not None for s in self.slots):
+        occupied = sum(s is not None for s in self.slots)
+        if occupied == 0:
             return False
+        # post-admission backlog + occupancy telemetry (per-tick; run()
+        # reports per-run slices of these lifetime logs)
+        self._queue_depth_log.append(len(self.queue))
+        self._occupancy_log.append(occupied)
         self._stage_slot_masks()
+        if self.multi_scene:
+            self._stage_scene_map()
         if self.fused:
             self._prime_admitted(newly)
 
@@ -562,6 +731,13 @@ class RenderServeEngine:
         # admission count) across runs, so report the deltas
         buckets_start = len(self.engine.pool_buckets_used)
         adm_start = self._num_admission_ticks
+        # same per-run-delta convention for queue/occupancy/scene-cache
+        qd_start = len(self._queue_depth_log)
+        shed_start = self._num_shed
+        sc_start = (dict(self.scene_cache.counters(),
+                         uploads=self._num_uploads,
+                         uploaded_bytes=self._uploaded_bytes)
+                    if self.multi_scene else None)
         t0 = time.time()
         in_flight = None  # (dispatch_t0, assignments, device result)
         while self.num_ticks - start_ticks < max_ticks:
@@ -577,7 +753,8 @@ class RenderServeEngine:
             self._observe_tick(*in_flight)
         wall_s = time.time() - t0
         self.finalize()
-        total_frames = sum(len(s.poses) for s in sessions)
+        # shed sessions render nothing — they must not inflate throughput
+        total_frames = sum(len(s.poses) for s in sessions if not s.shed)
         per_session = {
             s.sid: {
                 "frames": len(s.poses),
@@ -586,8 +763,44 @@ class RenderServeEngine:
                 "p95_latency_s": float(np.percentile(s.frame_latencies_s, 95))
                 if s.frame_latencies_s else float("nan"),
                 "hole_fraction": s.stats.mean_hole_fraction,
+                "scene": s.scene,
+                "shed": s.shed,
             } for s in sessions
         }
+        # admission-queue + slot-occupancy telemetry, per-run deltas/slices
+        depths = self._queue_depth_log[qd_start:]
+        occs = self._occupancy_log[qd_start:]
+        waits = [s.admitted_s - s.submitted_s for s in sessions
+                 if s.admitted_s is not None and s.submitted_s is not None]
+        queue_metrics = {
+            "depth_mean": float(np.mean(depths)) if depths else 0.0,
+            "depth_max": int(max(depths)) if depths else 0,
+            "wait_p50_s": float(np.percentile(waits, 50)) if waits else 0.0,
+            "wait_p95_s": float(np.percentile(waits, 95)) if waits else 0.0,
+            "shed": self._num_shed - shed_start,
+        }
+        slot_metrics = {
+            "num_slots": self.num_slots,
+            "occupancy_mean": (float(np.mean(occs)) / self.num_slots
+                               if occs else 0.0),
+            "active_slot_ticks": int(sum(occs)),
+        }
+        # scene-cache hit/miss/eviction spend of THIS run (lifetime
+        # counters snapshotted at entry — the pool.recompiles convention)
+        scene_metrics = None
+        if self.multi_scene:
+            end = dict(self.scene_cache.counters(),
+                       uploads=self._num_uploads,
+                       uploaded_bytes=self._uploaded_bytes)
+            scene_metrics = {
+                k: end[k] - sc_start[k]
+                for k in ("hits", "misses", "evictions", "evicted_bytes",
+                          "uploads", "uploaded_bytes")}
+            looked = scene_metrics["hits"] + scene_metrics["misses"]
+            scene_metrics["hit_rate"] = scene_metrics["hits"] / max(looked, 1)
+            scene_metrics["resident_bytes"] = end["resident_bytes"]
+            scene_metrics["resident_scenes"] = end["entries"]
+            scene_metrics["budget_bytes"] = self.config.scene_cache_bytes
         # pooled-capacity telemetry: sparse NeRF samples actually reserved
         # per tick vs the worst-case fixed-cap batch, pool occupancy, and
         # the recompile budget actually spent walking the bucket ladder
@@ -655,6 +868,9 @@ class RenderServeEngine:
             "policy": self.policy.name,
             "pool": pool_metrics,
             "memory": memory_metrics,
+            "queue": queue_metrics,
+            "slots": slot_metrics,
+            "scene_cache": scene_metrics,
             # session-sharding layout (1 = unsharded/single device)
             "devices": (self.engine.mesh.devices.size
                         if self.engine.mesh is not None else 1),

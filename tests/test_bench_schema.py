@@ -63,6 +63,22 @@ FUSED_SERVING_PARITY_KEYS = {"min_psnr_fused_vs_staged_db",
                              "hole_stats_identical", "psnr_gate_db",
                              "psnr_gate_met"}
 ANALYSIS_KEYS = {"rules", "findings", "suppressed"}
+LOAD_KEYS = {"smoke", "scenes", "num_slots", "window", "res",
+             "zipf_exponent", "policy", "config_fingerprint",
+             "uncontended", "overload", "scene_cache_hit_rate", "gates"}
+LOAD_PHASE_KEYS = {"sessions", "served", "shed", "ticks", "frames",
+                   "wall_s", "aggregate_fps", "tick_p50_s", "frame_p50_s",
+                   "frame_p95_s", "queue_wait_p50_s", "queue_wait_p95_s",
+                   "scene_cache", "sweeps_per_tick_steady",
+                   "sweeps_per_tick_amortized"}
+LOAD_CACHE_KEYS = {"hits", "misses", "evictions", "uploads", "hit_rate",
+                   "resident_scenes"}
+LOAD_GATE_KEYS = {"hit_rate_min", "hit_rate_met",
+                  "max_steady_sweeps_per_tick", "steady_sweeps_met",
+                  "shed_active", "overload_p95_ratio",
+                  "overload_p95_max_ratio", "overload_p95_met",
+                  "recompiles_after_warmup", "recompile_gate_met",
+                  "all_met"}
 
 
 def _load():
@@ -279,6 +295,51 @@ def test_analysis_schema_and_gates():
     assert an["rules"] >= 14
     assert an["findings"] == 0
     assert an["suppressed"] >= 0
+
+
+def test_load_schema_and_gates():
+    """Open-loop load block: Zipf scene popularity over a device page
+    cache smaller than the scene pool must keep the hot set resident
+    (hit rate >= 0.7), mixed-scene fused ticks must stay single-sweep
+    (<= 2 amortized with primes), the overload burst must SHED under
+    deadlines instead of collapsing p95 (<= 3x uncontended), and scene
+    churn after warmup must compile nothing."""
+    data = _load()
+    assert "load" in data, \
+        "BENCH_render.json lost the open-loop load baseline"
+    ld = data["load"]
+    assert LOAD_KEYS <= set(ld)
+    # the committed baseline is the FULL harness: 8 scenes paged through
+    # a 4-slot engine (smoke's 2-scene pool is trivially hot)
+    assert ld["smoke"] is False
+    assert ld["scenes"] >= 2 * ld["num_slots"] >= 8
+    assert ld["policy"] == "priority"
+    for phase in ("uncontended", "overload"):
+        assert LOAD_PHASE_KEYS <= set(ld[phase]), phase
+        assert LOAD_CACHE_KEYS <= set(ld[phase]["scene_cache"]), phase
+    # uncontended: everyone is served, the Zipf hot set stays resident
+    un = ld["uncontended"]
+    assert un["shed"] == 0 and un["served"] == un["sessions"]
+    assert un["scene_cache"]["resident_scenes"] <= ld["num_slots"]
+    assert ld["scene_cache_hit_rate"] >= 0.7
+    # overload: deadlined burst — shedding is the bounded-tail mechanism
+    ov = ld["overload"]
+    assert ov["deadline_ms"] > 0.0
+    assert ov["shed"] > 0 and ov["served"] + ov["shed"] == ov["sessions"]
+    g = ld["gates"]
+    assert LOAD_GATE_KEYS <= set(g)
+    assert g["hit_rate_min"] == 0.7 and g["hit_rate_met"] is True
+    assert g["max_steady_sweeps_per_tick"] == 2.0
+    assert g["steady_sweeps_met"] is True
+    assert un["sweeps_per_tick_steady"] <= 2.0
+    assert g["shed_active"] is True
+    assert g["overload_p95_max_ratio"] == 3.0
+    assert g["overload_p95_met"] is True
+    assert g["overload_p95_ratio"] <= 3.0
+    # scene churn re-steers traced inputs; it never retraces
+    assert g["recompiles_after_warmup"] == 0
+    assert g["recompile_gate_met"] is True
+    assert g["all_met"] is True
 
 
 def test_sharded_schema_and_gates():

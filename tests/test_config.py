@@ -190,6 +190,7 @@ def test_every_config_field_mutation_flips_fingerprint():
         "mvoxel_layout": "bank_interleaved", "model_kind": "tensorf",
         "backend": "streaming", "grid_res": 24, "channels": 8,
         "decoder": "mlp", "num_samples": 16, "stream_capacity": 256,
+        "scene_cache_bytes": 1 << 20,
     }
     # bases cover the validator combinations individual mutations need
     bases = [RenderConfig(),

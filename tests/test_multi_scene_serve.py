@@ -1,0 +1,252 @@
+"""Multi-scene serving: device-resident MVoxel paging + mixed-scene ticks.
+
+The contracts under test (ISSUE 10 tentpole):
+
+* **Mixed-scene bit-parity** — a tick whose slots view DIFFERENT scenes
+  produces, for every session, frames bit-identical to the run where its
+  scene had the engine to itself (the scened gather kernel executes the
+  same ``gather_block`` body on the same rows; RIT bucketing stays
+  per-segment).
+* **Eviction/repage bit-parity** — a scene evicted from the device cache
+  and later paged back in renders bit-identically to a run where it was
+  never evicted (pages hold rebuilt-identical tables; the page INDEX is
+  not part of the math).
+* **One compile across scene churn** — rotating which scenes occupy the
+  pages re-steers the traced ``scene_of_seg`` map, it never recompiles
+  (JitCacheProbe-asserted).
+* **SceneCache accounting** — cached-scene admits upload nothing; a miss
+  uploads exactly one table; live slots pin their pages.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import api
+from repro.core import pipeline
+from repro.core.config import RenderConfig
+from repro.core.scene_cache import SceneCache
+from repro.nerf import scenes
+from repro.serve.render_engine import RenderServeEngine, RenderSession
+
+
+def _base_cfg(**kw):
+    base = dict(scene="lego", res=24, window=2, grid_res=16, channels=4,
+                decoder="direct", num_samples=8, backend="streaming",
+                pool_holes=True, pallas_interpret=True, num_slots=2,
+                fused_tick=True)
+    base.update(kw)
+    return RenderConfig(**base).resolved()
+
+
+@pytest.fixture(scope="module")
+def setup():
+    cfg = _base_cfg()
+    r = api.make_renderer(cfg)
+
+    def loader(name):
+        return scenes.bake_dense_table(scenes.make_scene(name),
+                                       r.model.cfg.grid_res,
+                                       r.model.cfg.channels)
+
+    return r, cfg, loader
+
+
+def _traj(n, phase=0.0, step=4.0):
+    return list(pipeline.orbit_trajectory(n, step_deg=step, phase_deg=phase))
+
+
+def _run(r, cfg, loader, specs, **engine_kw):
+    """specs = [(sid, scene, traj)] -> (engine, sessions, metrics)."""
+    serve = RenderServeEngine(r.model, r.params, config=cfg,
+                              scene_loader=loader, **engine_kw)
+    sessions = [RenderSession(sid=sid, poses=list(t), scene=sc)
+                for sid, sc, t in specs]
+    metrics = serve.run(sessions)
+    return serve, sessions, metrics
+
+
+# ---------------------------------------------------------------------------
+# mixed-scene tick bit-parity
+# ---------------------------------------------------------------------------
+
+
+def test_mixed_scene_tick_matches_exclusive_runs(setup):
+    """Two slots viewing two different scenes in the SAME fused tick:
+    each session's frames are bit-identical to the run where its scene
+    was served exclusively (the other slot idle)."""
+    r, cfg, loader = setup
+    t0, t1 = _traj(4), _traj(4, phase=120.0)
+    _, mixed, mm = _run(r, cfg, loader,
+                        [(0, "chair", t0), (1, "drums", t1)])
+    assert mm["complete"]
+    for sid, sc, t in [(0, "chair", t0), (1, "drums", t1)]:
+        _, excl, me = _run(r, cfg, loader, [(sid, sc, t)])
+        assert me["complete"]
+        for fa, fb in zip(mixed[sid].frames, excl[0].frames):
+            np.testing.assert_array_equal(np.asarray(fa), np.asarray(fb))
+        assert mixed[sid].stats.hole_fractions == excl[0].stats.hole_fractions
+
+
+def test_single_scene_path_matches_multi_scene_default(setup):
+    """A multi-scene engine serving only the default scene (scene=None)
+    is bit-identical to the plain PR 8 engine (no scene_loader) on the
+    same fleet — the scened kernel gathers the same rows and the scened
+    fallback einsum is the same contraction."""
+    r, cfg, loader = setup
+    trajs = [_traj(4), _traj(4, phase=60.0)]
+    plain = RenderServeEngine(r.model, r.params, config=cfg)
+    p_sess = [RenderSession(sid=i, poses=list(t))
+              for i, t in enumerate(trajs)]
+    assert plain.run(p_sess)["complete"]
+    _, m_sess, mm = _run(r, cfg, loader,
+                         [(i, None, t) for i, t in enumerate(trajs)])
+    assert mm["complete"]
+    for a, b in zip(p_sess, m_sess):
+        for fa, fb in zip(a.frames, b.frames):
+            np.testing.assert_array_equal(np.asarray(fa), np.asarray(fb))
+
+
+def test_staged_mixed_scene_tick_matches_exclusive(setup):
+    """Mixed-scene slot batches work on the STAGED (non-fused) tick too:
+    the scene map rides inside params through the chunked flat renderer."""
+    r, _, loader = setup
+    cfg = _base_cfg(fused_tick=False)
+    t0, t1 = _traj(4), _traj(4, phase=120.0)
+    _, mixed, mm = _run(r, cfg, loader,
+                        [(0, "chair", t0), (1, "drums", t1)])
+    assert mm["complete"]
+    _, excl, _ = _run(r, cfg, loader, [(0, "chair", t0)])
+    for fa, fb in zip(mixed[0].frames, excl[0].frames):
+        np.testing.assert_array_equal(np.asarray(fa), np.asarray(fb))
+
+
+# ---------------------------------------------------------------------------
+# paging: upload-on-miss only, eviction/repage parity, pinning
+# ---------------------------------------------------------------------------
+
+
+def test_cached_scene_admission_uploads_nothing(setup):
+    """Back-to-back sessions on one scene: the second admission is a
+    cache hit — zero new uploads, zero evictions."""
+    r, cfg, loader = setup
+    serve = RenderServeEngine(r.model, r.params, config=cfg,
+                              scene_loader=loader)
+    m1 = serve.run([RenderSession(sid=0, poses=_traj(3), scene="chair")])
+    assert m1["scene_cache"]["uploads"] == 1
+    assert m1["scene_cache"]["misses"] == 1
+    m2 = serve.run([RenderSession(sid=1, poses=_traj(3), scene="chair")])
+    assert m2["scene_cache"]["uploads"] == 0
+    assert m2["scene_cache"]["hits"] >= 1
+    assert m2["scene_cache"]["evictions"] == 0
+
+
+def test_eviction_and_repage_bit_parity(setup):
+    """Rotate 3 scenes through a 2-page cache so the first is evicted,
+    then serve it again (repage): its frames are bit-identical to a run
+    on a never-evicted engine, and the cache reports the eviction."""
+    r, cfg, loader = setup
+    t = _traj(4)
+    serve = RenderServeEngine(r.model, r.params, config=cfg,
+                              scene_loader=loader)
+    # sequential runs: each occupies one slot; 3 distinct scenes > 2 pages
+    serve.run([RenderSession(sid=0, poses=list(t), scene="chair")])
+    serve.run([RenderSession(sid=1, poses=list(t), scene="drums"),
+               RenderSession(sid=2, poses=list(t), scene="ficus")])
+    assert serve.scene_cache.evictions >= 1
+    assert "chair" not in serve.scene_cache  # the LRU victim
+    repaged = RenderSession(sid=3, poses=list(t), scene="chair")
+    m = serve.run([repaged])
+    assert m["scene_cache"]["misses"] >= 1  # it really was repaged
+    fresh, excl, _ = _run(r, cfg, loader, [(0, "chair", t)])
+    assert fresh.scene_cache.evictions == 0
+    for fa, fb in zip(repaged.frames, excl[0].frames):
+        np.testing.assert_array_equal(np.asarray(fa), np.asarray(fb))
+
+
+def test_live_slots_pin_their_pages(setup):
+    """A scene held by an in-flight slot is never evicted, even when
+    admissions churn the other page."""
+    r, cfg, loader = setup
+    serve = RenderServeEngine(r.model, r.params, config=cfg,
+                              scene_loader=loader)
+    long_s = RenderSession(sid=0, poses=_traj(10), scene="chair")
+    churn = [RenderSession(sid=1 + i, poses=_traj(2), scene=sc)
+             for i, sc in enumerate(["drums", "ficus", "hotdog", "mic"])]
+    m = serve.run([long_s] + churn)
+    assert m["complete"]
+    assert m["scene_cache"]["evictions"] >= 2  # the churn page recycled
+    assert "chair" in serve.scene_cache       # the pinned page survived
+    assert all(f is not None for f in long_s.frames)
+
+
+def test_scene_churn_zero_recompiles_after_warmup(setup):
+    """Scene-set churn re-steers the traced scene_of_seg map; it must
+    never recompile the tick program (static on K pages, not on which
+    scenes occupy them)."""
+    from repro.analysis.jitprobe import JitCacheProbe
+
+    r, cfg, loader = setup
+    serve = RenderServeEngine(r.model, r.params, config=cfg,
+                              scene_loader=loader)
+    serve.run([RenderSession(sid=0, poses=_traj(4), scene="chair"),
+               RenderSession(sid=1, poses=_traj(4), scene="drums")])
+    probe = JitCacheProbe(serve.engine)
+    with probe.assert_no_new_compiles("scene churn"):
+        serve.run([RenderSession(sid=2, poses=_traj(4), scene="ficus"),
+                   RenderSession(sid=3, poses=_traj(4), scene="hotdog"),
+                   RenderSession(sid=4, poses=_traj(4), scene="ship")])
+
+
+def test_scene_requires_loader_and_backend():
+    """scene= on a loaderless engine is rejected at submit; a loader on a
+    non-streaming engine is rejected at construction."""
+    cfg = _base_cfg()
+    r = api.make_renderer(cfg)
+    plain = RenderServeEngine(r.model, r.params, config=cfg)
+    with pytest.raises(ValueError, match="no scene_loader"):
+        plain.submit([RenderSession(sid=0, poses=_traj(2), scene="chair")])
+    dense_cfg = RenderConfig(scene="lego", res=24, window=2, grid_res=16,
+                             channels=4, decoder="direct", num_samples=8,
+                             backend="dense", num_slots=2).resolved()
+    rd = api.make_renderer(dense_cfg)
+    with pytest.raises(ValueError, match="segment-aware streaming"):
+        RenderServeEngine(rd.model, rd.params, config=dense_cfg,
+                          scene_loader=lambda name: None)
+
+
+# ---------------------------------------------------------------------------
+# SceneCache unit behavior (budget, pinning, counters)
+# ---------------------------------------------------------------------------
+
+
+def test_scene_cache_byte_budget_and_counters():
+    c = SceneCache(budget_bytes=100)
+    assert c.put("a", 1, nbytes=60) == []
+    assert c.put("b", 2, nbytes=60) == [("a", 1)]  # over budget: LRU out
+    assert c.get("a") is None and c.get("b") == 2
+    assert c.counters()["evicted_bytes"] == 60
+    assert c.resident_bytes == 60
+    # pinned keys are never stolen, even over budget
+    assert c.put("c", 3, nbytes=60, pinned=("b",)) == []
+    assert c.resident_bytes == 120  # budget yields to pins
+    assert "b" in c and "c" in c
+
+
+def test_scene_cache_get_or_build_builds_once():
+    c = SceneCache(max_entries=2)
+    calls = []
+
+    def build(k):
+        def _b():
+            calls.append(k)
+            return k.upper(), 1
+        return _b
+
+    assert c.get_or_build("x", build("x")) == "X"
+    assert c.get_or_build("x", build("x")) == "X"
+    assert calls == ["x"]
+    assert c.hits == 1 and c.misses == 1
+    c.get_or_build("y", build("y"))
+    c.get_or_build("z", build("z"))  # evicts x (LRU, max_entries=2)
+    assert len(c) == 2 and "x" not in c
